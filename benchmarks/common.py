@@ -1,0 +1,86 @@
+"""Shared benchmark infrastructure.
+
+Environment:
+  CKIO_BENCH_MB     base file size in MB (default 192; quick mode 48)
+  CKIO_BENCH_QUICK  =1 -> smaller files / fewer points (default on: this
+                    container has 1 core; full mode for real machines)
+
+All I/O benchmarks drop the page cache between trials when the kernel
+allows (posix_fadvise DONTNEED); whether eviction worked is recorded, since
+warm-cache numbers measure memory bandwidth, not storage.
+"""
+from __future__ import annotations
+
+import os
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.data.synthetic import make_opaque_file
+from repro.io.posix import drop_page_cache
+
+QUICK = os.environ.get("CKIO_BENCH_QUICK", "1") == "1"
+BASE_MB = int(os.environ.get("CKIO_BENCH_MB", "48" if QUICK else "192"))
+BENCH_DIR = os.environ.get("CKIO_BENCH_DIR", "/tmp/ckio_bench")
+
+_ROWS: List[Dict] = []
+
+
+def ensure_file(name: str, mb: int) -> str:
+    path = os.path.join(BENCH_DIR, f"{name}_{mb}mb.bin")
+    if not os.path.exists(path) or os.path.getsize(path) != mb * (1 << 20):
+        make_opaque_file(path, mb * (1 << 20), seed=hash(name) % 2**31)
+    return path
+
+
+def cold(path: str) -> bool:
+    return drop_page_cache(path)
+
+
+@dataclass
+class Trial:
+    wall_s: float
+    bytes: int
+    cold_cache: bool
+    extra: Dict = field(default_factory=dict)
+
+    @property
+    def mbps(self) -> float:
+        return self.bytes / self.wall_s / 1e6 if self.wall_s > 0 else 0.0
+
+
+def timed(fn: Callable[[], int], path_for_cold: Optional[str] = None) -> Trial:
+    evicted = cold(path_for_cold) if path_for_cold else False
+    t0 = time.perf_counter()
+    nbytes = fn()
+    return Trial(wall_s=time.perf_counter() - t0, bytes=nbytes,
+                 cold_cache=evicted)
+
+
+def repeat(fn: Callable[[], int], n: int = 3,
+           path_for_cold: Optional[str] = None) -> List[Trial]:
+    return [timed(fn, path_for_cold) for _ in range(n)]
+
+
+def summarize(trials: List[Trial]) -> Dict[str, float]:
+    walls = [t.wall_s for t in trials]
+    return {
+        "mean_s": statistics.mean(walls),
+        "min_s": min(walls),
+        "stdev_s": statistics.stdev(walls) if len(walls) > 1 else 0.0,
+        "mean_MBps": statistics.mean(t.mbps for t in trials),
+        "best_MBps": max(t.mbps for t in trials),
+        "cold": all(t.cold_cache for t in trials),
+    }
+
+
+def emit(name: str, us_per_call: float, derived: str, **kw) -> None:
+    row = {"name": name, "us_per_call": round(us_per_call, 1),
+           "derived": derived, **kw}
+    _ROWS.append(row)
+    print(f"{name},{row['us_per_call']},{derived}", flush=True)
+
+
+def rows() -> List[Dict]:
+    return _ROWS

@@ -1,0 +1,57 @@
+"""Paper Fig. 12: read latency before vs after client migration.
+
+Two "nodes", one PE each; two readers (one stripe per node); two clients
+each wanting the OTHER node's stripe. Before migration every piece crosses
+the node boundary; after migrating each client to its data, reads are
+local. The cross-node transfer is MODELED (documented: single address
+space here) with a 10 Gb/s + 50 µs NetworkModel — the paper's Bridges2 IB
+is faster, but the *mechanism* (latency gap grows with size) is identical.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import QUICK, emit, ensure_file, cold
+from repro.core import CkIO, FileOptions, NetworkModel
+
+
+def run() -> None:
+    sizes_mb = [2, 8, 32] if QUICK else [2, 8, 32, 128, 256]
+    for mb in sizes_mb:
+        path = ensure_file("fig12", mb)
+        net = NetworkModel(bw_bytes_per_s=1.25e9, latency_s=50e-6)
+        ck = CkIO(num_pes=2, pes_per_node=1)          # 2 nodes x 1 PE
+        fh = ck.open_sync(path, FileOptions(num_readers=2,
+                                            placement="round_robin",
+                                            network=net))
+        sess = ck.start_read_session_sync(fh, fh.size, 0)
+        assert sess.readers.join(120)                  # isolate transfer cost
+        half = fh.size // 2
+
+        c0 = ck.make_client(pe=0)   # wants reader 1's stripe (node 1)
+        c1 = ck.make_client(pe=1)   # wants reader 0's stripe (node 0)
+
+        def both(tag: str) -> float:
+            t0 = time.perf_counter()
+            f0 = ck.read_future(sess, half, half, client=c0)
+            f1 = ck.read_future(sess, half, 0, client=c1)
+            f0.wait(ck.sched, timeout=300)
+            f1.wait(ck.sched, timeout=300)
+            return time.perf_counter() - t0
+
+        t_pre = both("pre")
+        c0.migrate(1)
+        c1.migrate(0)
+        t_post = both("post")
+        emit(f"fig12_premigration_{mb}mb", t_pre * 1e6, f"{t_pre*1e3:.2f}ms")
+        emit(f"fig12_postmigration_{mb}mb", t_post * 1e6,
+             f"speedup={t_pre/max(t_post,1e-9):.2f}x_gap="
+             f"{(t_pre-t_post)*1e3:.2f}ms")
+        cross = sess.metrics.cross_node_bytes
+        ck.close_read_session_sync(sess)
+        ck.close_sync(fh)
+        net.shutdown()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Fig. 1: naive over-decomposed input throughput vs #clients.
+
+3 file sizes × a sweep of client counts at fixed PEs, in two modes:
+  * ``local`` — honest hardware numbers on this container's FS (page-cached
+    ext4 tolerates many small reads; the U-curve is weak here),
+  * ``pfs``   — the simulated Lustre service model (benchmarks/pfs_model.py):
+    per-RPC cost + shared OST bandwidth + single-stream cap. This mode
+    exhibits the paper's U-curve for the paper's reasons.
+"""
+from __future__ import annotations
+
+from benchmarks.common import BASE_MB, QUICK, emit, ensure_file, repeat, summarize
+from benchmarks.naive_input import naive_read
+from benchmarks.pfs_model import PFSModel
+
+NUM_PES = 8
+
+
+def run() -> None:
+    sizes = [BASE_MB // 4, BASE_MB]
+    clients = [1, 8, 64, 512] if QUICK else [1, 4, 8, 32, 128, 512, 2048]
+    for mb in sizes:
+        path = ensure_file("fig1", mb)
+        for c in clients:
+            s = summarize(repeat(lambda: naive_read(path, c, NUM_PES),
+                                 n=2 if QUICK else 3, path_for_cold=path))
+            emit(f"fig1_local_{mb}mb_c{c}", s["mean_s"] * 1e6,
+                 f"{s['mean_MBps']:.0f}MBps_cold={int(s['cold'])}")
+        for c in clients:
+            pfs = PFSModel()
+            s = summarize(repeat(
+                lambda: naive_read(path, c, NUM_PES, pfs=pfs), n=2))
+            emit(f"fig1_pfs_{mb}mb_c{c}", s["mean_s"] * 1e6,
+                 f"{s['mean_MBps']:.0f}MBps")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Fig. 7: CkIO vs MPI-IO-style synchronous collective input.
+
+The baseline is a faithful two-phase collective: aggregator reads with a
+barrier, then scatter — no prefetch, no splinters, no async. Sweep the
+worker count ("ranks/node"); CkIO gets the same reader counts.
+"""
+from __future__ import annotations
+
+from benchmarks.ckio_read import ckio_read
+from benchmarks.common import BASE_MB, QUICK, emit, ensure_file, repeat, summarize
+from benchmarks.naive_input import collective_read
+
+
+def run() -> None:
+    mb = BASE_MB
+    path = ensure_file("fig7", mb)
+    workers = [2, 8] if QUICK else [2, 4, 8, 16, 32]
+    for w in workers:
+        t_mpi = summarize(repeat(
+            lambda: collective_read(path, w, 32)[0], n=2, path_for_cold=path))
+        t_ck = summarize(repeat(
+            lambda: ckio_read(path, 32, w, num_pes=max(8, w))[0],
+            n=2, path_for_cold=path))
+        speed = t_mpi["mean_s"] / max(t_ck["mean_s"], 1e-9)
+        emit(f"fig7_collective_w{w}", t_mpi["mean_s"] * 1e6,
+             f"{t_mpi['mean_MBps']:.0f}MBps")
+        emit(f"fig7_ckio_w{w}", t_ck["mean_s"] * 1e6,
+             f"{t_ck['mean_MBps']:.0f}MBps_speedup={speed:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,195 @@
+"""Paper Figs. 8–9: compute/input overlap.
+
+Fig. 8: total runtime of naive vs CkIO input, with and without a fixed
+amount of background work. Naive reads run *inside* scheduler tasks and
+block the PE (exactly the paper's blocking semantics); CkIO reads run on
+helper I/O threads with split-phase callbacks, so background chares keep
+executing.
+
+Fig. 9: fraction of the input wall time usable for background work, vs the
+number of clients (the paper sees >75 % up to 64 clients/PE, degrading as
+request bookkeeping floods the scheduler).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import BASE_MB, QUICK, emit, ensure_file, cold
+from benchmarks.pfs_model import PFSModel
+from repro.core import CkIO, CkFuture, FileOptions
+from repro.core.scheduler import TaskScheduler
+from repro.io.posix import PosixFile
+
+NUM_PES = 8
+GRAIN_US = 10.0
+
+
+class BoundedWorker:
+    """Fixed-iteration background chare (yields to the scheduler each iter)."""
+
+    def __init__(self, sched: TaskScheduler, pe: int, target: int):
+        self.sched, self.pe, self.target = sched, pe, target
+        self.iters = 0
+        self.busy_s = 0.0
+
+    def start(self):
+        self.sched.enqueue(self.pe, self._iter)
+
+    @property
+    def done(self) -> bool:
+        return self.iters >= self.target
+
+    def _iter(self):
+        if self.done:
+            return
+        t0 = time.perf_counter()
+        while time.perf_counter() - t0 < GRAIN_US * 1e-6:
+            pass
+        self.busy_s += time.perf_counter() - t0
+        self.iters += 1
+        self.sched.enqueue(self.pe, self._iter)
+
+
+def naive_blocking_input(sched: TaskScheduler, path: str, clients: int,
+                         done_fut: CkFuture, pfs=None) -> None:
+    """Each client read is a PE-blocking scheduler task."""
+    f = PosixFile.open(path)
+    size = f.size
+    per = size // clients
+    state = {"left": clients}
+
+    def one(i: int):
+        off = i * per
+        n = per if i < clients - 1 else size - off
+        got = 0
+        while got < n:
+            take = min(n - got, 1 << 25)
+            if pfs is not None:
+                pfs.request(take)
+            got += len(f.pread(off + got, take))
+        state["left"] -= 1
+        if state["left"] == 0:
+            f.close()
+            done_fut.set(None)
+
+    for i in range(clients):
+        sched.enqueue(i % sched.num_pes, one, i)
+
+
+def run_fig8() -> None:
+    mb = max(BASE_MB // 2, 16)
+    path = ensure_file("fig8", mb)
+    bg_iters_total = 20_000 if QUICK else 100_000   # fixed background work
+
+    def measure(kind: str, with_bg: bool) -> float:
+        # PFS service model: the input takes realistically long, so overlap
+        # (or its absence) is visible — warm local page cache reads are too
+        # fast to overlap anything on one core.
+        pfs = PFSModel()
+        sched = TaskScheduler(NUM_PES, pes_per_node=2)
+        workers = []
+        if with_bg:
+            per = bg_iters_total // NUM_PES
+            workers = [BoundedWorker(sched, pe, per) for pe in range(NUM_PES)]
+        cold(path)
+        t0 = time.perf_counter()
+        input_done = CkFuture()
+        if kind == "naive":
+            for w in workers:
+                w.start()
+            naive_blocking_input(sched, path, NUM_PES, input_done, pfs=pfs)
+        else:
+            ck = CkIO(num_pes=NUM_PES, pes_per_node=2, sched=sched)
+            fh = ck.open_sync(path, FileOptions(
+                num_readers=NUM_PES, delay_model=pfs.reader_delay_model()))
+            sess = ck.start_read_session_sync(fh, fh.size, 0)
+            for w in workers:
+                w.start()
+            per = fh.size // NUM_PES
+            state = {"left": NUM_PES}
+
+            def on_read(_msg):
+                state["left"] -= 1
+                if state["left"] == 0:
+                    input_done.set(None)
+
+            from repro.core import CkCallback
+
+            for i in range(NUM_PES):
+                off = i * per
+                n = per if i < NUM_PES - 1 else fh.size - off
+                ck.read(sess, n, off, bytearray(n),
+                        CkCallback(on_read, pe=i))
+        sched.run_until(
+            lambda: input_done.done and all(w.done for w in workers),
+            timeout=600,
+        )
+        return time.perf_counter() - t0
+
+    t_naive = measure("naive", False)
+    t_naive_bg = measure("naive", True)
+    t_ckio = measure("ckio", False)
+    t_ckio_bg = measure("ckio", True)
+    t_bg = bg_iters_total * GRAIN_US * 1e-6     # analytic bg-only time
+    emit("fig8_naive_input_only", t_naive * 1e6, f"{t_naive:.3f}s")
+    emit("fig8_naive_with_bg", t_naive_bg * 1e6,
+         f"added={t_naive_bg-t_naive:.3f}s")
+    emit("fig8_ckio_input_only", t_ckio * 1e6, f"{t_ckio:.3f}s")
+    # overlap efficiency: how much of the input window was absorbed —
+    # 1.0 = total(with bg) == max(input, bg); 0.0 = fully serialized
+    hidden_naive = t_naive + max(t_bg, 0) - t_naive_bg
+    hidden_ckio = t_ckio + max(t_bg, 0) - t_ckio_bg
+    emit("fig8_ckio_with_bg", t_ckio_bg * 1e6,
+         f"added={t_ckio_bg-t_ckio:.3f}s_hiddenwork_ckio_vs_naive="
+         f"{hidden_ckio:.3f}s/{hidden_naive:.3f}s")
+
+
+def run_fig9() -> None:
+    mb = max(BASE_MB // 2, 16)
+    path = ensure_file("fig9", mb)
+    client_counts = [8, 64, 512] if QUICK else [8, 64, 256, 1024, 4096]
+    for clients in client_counts:
+        pfs = PFSModel()
+        sched = TaskScheduler(NUM_PES, pes_per_node=2)
+        ck = CkIO(num_pes=NUM_PES, pes_per_node=2, sched=sched)
+        fh = ck.open_sync(path, FileOptions(
+            num_readers=NUM_PES, delay_model=pfs.reader_delay_model()))
+        cold(path)
+        sess = ck.start_read_session_sync(fh, fh.size, 0)
+        workers = [BoundedWorker(sched, pe, 10**9) for pe in range(NUM_PES)]
+        per = fh.size // clients
+        state = {"left": clients}
+        done = CkFuture()
+
+        from repro.core import CkCallback
+
+        def on_read(_msg):
+            state["left"] -= 1
+            if state["left"] == 0:
+                done.set(None)
+
+        t0 = time.perf_counter()
+        for w in workers:
+            w.start()
+        for i in range(clients):
+            off = i * per
+            n = per if i < clients - 1 else fh.size - off
+            c = ck.make_client(pe=i % NUM_PES)
+            ck.read(sess, n, off, bytearray(n), c.callback(on_read), client=c)
+        sched.run_until(lambda: done.done, timeout=600)
+        wall = time.perf_counter() - t0
+        busy = sum(w.busy_s for w in workers)
+        frac = busy / wall if wall > 0 else 0.0
+        emit(f"fig9_overlap_c{clients}", wall * 1e6,
+             f"bg_fraction={100*frac:.1f}%")
+        ck.close_read_session_sync(sess)
+        ck.close_sync(fh)
+
+
+def run() -> None:
+    run_fig8()
+    run_fig9()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,97 @@
+"""Naive over-decomposed parallel input (the paper's baseline).
+
+Every client makes its own file-system call for its disjoint chunk, and the
+call blocks the PE running it (paper Fig. 1/3a). PEs are modeled as a pool
+of worker threads (``num_pes``); clients queue onto them. More clients than
+PEs ⇒ more, smaller, interleaved reads of one file — the congestion the
+paper measures. Also provides the "MPI-IO-like" synchronous two-phase
+collective baseline used by Fig. 7.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import os
+import threading
+import time
+from typing import List, Tuple
+
+from repro.io.posix import PosixFile
+
+
+def naive_read(path: str, num_clients: int, num_pes: int,
+               offset: int = 0, nbytes: int = None, pfs=None) -> int:
+    """Each of ``num_clients`` preads its disjoint chunk on a PE pool."""
+    f = PosixFile.open(path)
+    try:
+        size = nbytes if nbytes is not None else (f.size - offset)
+        per = size // num_clients
+
+        def client(i: int) -> int:
+            off = offset + i * per
+            n = per if i < num_clients - 1 else size - i * per
+            got = 0
+            # a client reads its chunk in one call (paper's naive scheme)
+            while got < n:
+                take = min(n - got, 1 << 26)
+                if pfs is not None:
+                    pfs.request(take)
+                b = f.pread(off + got, take)
+                if not b:
+                    break
+                got += len(b)
+            return got
+
+        with cf.ThreadPoolExecutor(max_workers=num_pes) as ex:
+            total = sum(ex.map(client, range(num_clients)))
+        return total
+    finally:
+        f.close()
+
+
+def collective_read(path: str, num_aggregators: int,
+                    num_ranks: int, offset: int = 0, nbytes: int = None,
+                    pfs=None) -> Tuple[int, float, float]:
+    """Synchronous two-phase collective input (MPI-IO ROMIO style):
+    phase 1: aggregators read disjoint stripes (barrier),
+    phase 2: scatter each rank's portion out of the aggregation buffers.
+    No prefetch, no splinters, no overlap — the structured baseline CkIO is
+    compared against in paper Fig. 7.
+    Returns (bytes, t_read, t_scatter)."""
+    f = PosixFile.open(path)
+    try:
+        size = nbytes if nbytes is not None else (f.size - offset)
+        per = (size + num_aggregators - 1) // num_aggregators
+        bufs: List[bytearray] = [None] * num_aggregators  # type: ignore
+
+        def agg(i: int) -> int:
+            off = i * per
+            n = min(per, size - off)
+            if n <= 0:
+                bufs[i] = bytearray(0)
+                return 0
+            buf = bytearray(n)
+            if pfs is not None:
+                pfs.request(n)
+            f.pread_into(offset + off, memoryview(buf))
+            bufs[i] = buf
+            return n
+
+        t0 = time.perf_counter()
+        with cf.ThreadPoolExecutor(max_workers=num_aggregators) as ex:
+            total = sum(ex.map(agg, range(num_aggregators)))
+        t_read = time.perf_counter() - t0     # barrier: all reads complete
+
+        # phase 2: ranks copy their ranges out (the "permutation")
+        t0 = time.perf_counter()
+        rper = size // num_ranks
+        out = bytearray(rper)
+        for r in range(num_ranks):
+            off = r * rper
+            a = min(off // per, num_aggregators - 1)
+            lo = off - a * per
+            take = min(rper, len(bufs[a]) - lo)
+            out[:take] = bufs[a][lo:lo + take]
+        t_scatter = time.perf_counter() - t0
+        return total, t_read, t_scatter
+    finally:
+        f.close()

@@ -1,0 +1,102 @@
+"""Benchmark runner — one function per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV rows (and saves them under
+benchmarks/results/bench.csv). Sizes scale with CKIO_BENCH_MB /
+CKIO_BENCH_QUICK (quick defaults sized for this 1-core container).
+"""
+from __future__ import annotations
+
+import csv
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import common
+
+
+def fig1_naive_overdecomposition() -> None:
+    from benchmarks import fig1_naive_overdecomposition as m
+    m.run()
+
+
+def fig2_disk_vs_network() -> None:
+    from benchmarks import fig2_disk_vs_network as m
+    m.run()
+
+
+def fig4_ckio_vs_naive() -> None:
+    from benchmarks import fig4_ckio_vs_naive as m
+    m.run()
+
+
+def fig7_collective_baseline() -> None:
+    from benchmarks import fig7_collective_baseline as m
+    m.run()
+
+
+def fig8_9_overlap() -> None:
+    from benchmarks import fig8_9_overlap as m
+    m.run()
+
+
+def fig12_migration() -> None:
+    from benchmarks import fig12_migration as m
+    m.run()
+
+
+def fig13_train_input() -> None:
+    from benchmarks import fig13_train_input as m
+    m.run()
+
+
+def sec5_breakdown() -> None:
+    from benchmarks import sec5_breakdown as m
+    m.run()
+
+
+def perf_input_hillclimb() -> None:
+    from benchmarks import perf_input_hillclimb as m
+    m.run()
+
+
+ALL = [
+    fig1_naive_overdecomposition,
+    fig2_disk_vs_network,
+    fig4_ckio_vs_naive,
+    fig7_collective_baseline,
+    fig8_9_overlap,
+    fig12_migration,
+    fig13_train_input,
+    sec5_breakdown,
+    perf_input_hillclimb,
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        if only and only not in fn.__name__:
+            continue
+        t0 = time.time()
+        print(f"# --- {fn.__name__} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:  # keep the suite running
+            common.emit(f"{fn.__name__}_ERROR", 0.0, repr(e)[:120])
+        print(f"# {fn.__name__}: {time.time()-t0:.1f}s", flush=True)
+
+    os.makedirs("benchmarks/results", exist_ok=True)
+    with open("benchmarks/results/bench.csv", "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=["name", "us_per_call", "derived"],
+                           extrasaction="ignore")
+        w.writeheader()
+        for row in common.rows():
+            w.writerow(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper §V: CkIO execution-time breakdown — I/O vs data permutation vs
+over-decomposition overhead, at a high over-decomposition factor."""
+from __future__ import annotations
+
+from benchmarks.ckio_read import ckio_read
+from benchmarks.common import BASE_MB, QUICK, emit, ensure_file, cold
+
+
+def run() -> None:
+    mb = BASE_MB
+    path = ensure_file("sec5", mb)
+    clients = 512
+    readers = 8
+    cold(path)
+    nbytes, m = ckio_read(path, clients, readers, num_pes=8)
+    io_s = m["ingest_s"]
+    permute_s = m["permute_time_s"]
+    emit("sec5_io", io_s * 1e6, f"{m['throughput_MBps']:.0f}MBps")
+    emit("sec5_permutation", permute_s * 1e6,
+         f"{100*permute_s/max(io_s,1e-9):.1f}%_of_io")
+    emit("sec5_requests", m["requests"],
+         f"pieces={int(m['pieces_served'])}_steals={int(m['steals'])}")
+    emit("sec5_imbalance", 0.0, f"max/mean={m['imbalance']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Compute/input overlap demo (paper Figs. 8–9 mechanism, minimal form).
+
+Background chares keep executing on every PE while a read session ingests a
+file on helper I/O threads; the printed fraction is the share of the input
+window spent doing useful background compute.
+
+    PYTHONPATH=src python examples/ckio_overlap.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import CkIO, BackgroundWorker, CkFuture, FileOptions
+
+path = "/tmp/ckio_overlap.bin"
+with open(path, "wb") as f:
+    f.write(np.random.default_rng(0).integers(0, 256, 96 << 20,
+                                              dtype=np.uint8).tobytes())
+
+ck = CkIO(num_pes=4)
+workers = [BackgroundWorker(ck.sched, pe, grain_us=10) for pe in range(4)]
+fh = ck.open_sync(path, FileOptions(num_readers=4))
+
+t0 = time.perf_counter()
+sess = ck.start_read_session_sync(fh, fh.size, 0)
+for w in workers:
+    w.start()
+
+done = CkFuture()
+buf = bytearray(fh.size)
+ck.read(sess, fh.size, 0, buf, done)
+done.wait(ck.sched, timeout=120)
+wall = time.perf_counter() - t0
+for w in workers:
+    w.stop()
+
+busy = sum(w.busy_s for w in workers)
+iters = sum(w.iterations for w in workers)
+print(f"input window: {wall*1e3:.1f} ms for {fh.size >> 20} MB "
+      f"({fh.size/wall/1e6:.0f} MB/s)")
+print(f"background work done during input: {iters} iterations, "
+      f"{busy*1e3:.1f} ms busy -> overlap fraction {100*busy/wall:.1f}%")
+ck.close_read_session_sync(sess)
+ck.close_sync(fh)

@@ -1,0 +1,23 @@
+"""Serving example: batched greedy decoding of CkIO-loaded prompts on a
+reduced recurrentgemma (hybrid RG-LRU + local attention).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+if __name__ == "__main__":
+    sys.argv = [
+        "serve",
+        "--arch", "recurrentgemma-2b",
+        "--smoke",
+        "--requests", "12",
+        "--batch", "4",
+        "--prompt-len", "24",
+        "--max-new", "8",
+    ] + sys.argv[1:]
+    from repro.launch.serve import main
+
+    main()

@@ -1,0 +1,29 @@
+"""End-to-end driver: train a reduced qwen2-moe through the CkIO pipeline
+for a few hundred steps with checkpoints + fault-tolerant supervisor.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+(This is a thin preset over ``python -m repro.launch.train``.)
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    sys.argv = [
+        "train",
+        "--arch", "qwen2-moe-a2.7b",
+        "--smoke",
+        "--steps", "200",
+        "--global-batch", "8",
+        "--seq", "128",
+        "--microbatches", "2",
+        "--num-readers", "4",
+        "--num-consumers", "32",
+        "--ckpt-every", "50",
+    ] + args
+    from repro.launch.train import main
+
+    main()

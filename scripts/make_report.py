@@ -1,0 +1,153 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline markdown from the JSONL.
+
+Usage: PYTHONPATH=src python scripts/make_report.py [dryrun.jsonl]
+Prints the two sections to stdout (pasted into EXPERIMENTS.md).
+"""
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.roofline import (  # noqa: E402
+    HBM_PER_CHIP,
+    analyze_record,
+    latest_by_cell,
+    load_records,
+)
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def hbm_gib(rec):
+    if "temp_size_in_bytes" not in rec:
+        return None
+    return (rec.get("argument_size_in_bytes", 0)
+            + rec.get("temp_size_in_bytes", 0)) / 2**30
+
+
+def coll_total(rec):
+    c = rec.get("collectives") or rec.get("scanned_collectives") or {}
+    return sum(v for k, v in c.items() if k != "count")
+
+
+def what_to_do(r, rec) -> str:
+    """One sentence per cell: what moves the dominant term down (wording
+    reflects the MEASURED §Perf findings, not just priors)."""
+    arch, shape, dom = r.arch, r.shape, r.dominant
+    fam_ssm = arch in ("falcon-mamba-7b",)
+    fam_moe = arch in ("qwen2-moe-a2.7b", "olmoe-1b-7b")
+    odd_heads = arch in ("phi3-medium-14b", "phi4-mini-3.8b", "qwen2-vl-2b")
+    if r.shape == "train_4k":
+        if dom == "memory":
+            if fam_ssm:
+                return ("fuse per-chunk SSM discretization so (B,S,d_i,n) "
+                        "never materializes — measured −69% (§Perf A)")
+            return ("pre-fusion bytes dominated by attention/GLU "
+                    "intermediates + gathered logits; Pallas flash kernel "
+                    "keeps softmax in VMEM, one-hot xent avoids the logits "
+                    "gather (measured −71% on phi4)")
+        if dom == "collective":
+            base = ("TP activation psums (2/layer/microbatch) + ZeRO param "
+                    "gathers; Megatron-style sequence parallelism would "
+                    "halve them")
+            if odd_heads:
+                base += ("; head padding removes the hd-shard score psums "
+                         "(measured −69% total, §Perf B)")
+            return base
+    if r.shape == "prefill_32k":
+        if dom == "memory":
+            return ("attention score/prob traffic: the Pallas flash kernel "
+                    "keeps the online softmax in VMEM (reads q/k/v once)")
+        if dom == "collective":
+            return ("per-layer TP activation psums at 32k tokens; "
+                    "sequence-parallel (ring) attention amortizes them")
+    if r.shape in ("decode_32k", "long_500k"):
+        if dom == "collective" and odd_heads:
+            return ("hd-shard score psums in decode — head padding (§Perf "
+                    "B) removes them")
+        if fam_moe:
+            return ("resident expert weights dominate: only top-k shards "
+                    "are touched per token — int8 weights or expert "
+                    "caching cut traffic")
+        return ("one pass over KV cache + weights is the floor; larger "
+                "decode batch or int8 KV cache raises tokens/s")
+    return "—"
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "benchmarks/results/dryrun.jsonl"
+    recs = load_records(path)
+    base = latest_by_cell(recs, tag="")
+
+    # ---------- §Dry-run table ----------
+    print("### Dry-run results (production config per cell)\n")
+    print("| arch | shape | mesh | compile | HBM/chip (GiB) | fit<16 | "
+          "collective B/dev (method) |")
+    print("|---|---|---|---|---|---|---|")
+    for (arch, shape, mesh), rec in sorted(
+        base.items(), key=lambda kv: (kv[0][0], SHAPE_ORDER.get(kv[0][1], 9),
+                                      kv[0][2])
+    ):
+        if "error" in rec:
+            print(f"| {arch} | {shape} | {mesh} | **FAIL** | — | — | "
+                  f"{rec['error'][:60]} |")
+            continue
+        g = hbm_gib(rec)
+        fit = "—" if g is None else ("✓" if g <= 16 else "**✗**")
+        meth = rec.get("collectives_method", "scanned")
+        meth = {"extrapolated(nb=2,4)": "extrap",
+                "exact(unrolled)": "exact",
+                "scanned(undercounted)": "scanned*"}.get(meth, meth)
+        print(f"| {arch} | {shape} | {mesh} | ok "
+              f"({rec.get('t_compile_s','-')}s) | "
+              f"{'-' if g is None else f'{g:.1f}'} | {fit} | "
+              f"{coll_total(rec):.2e} ({meth}) |")
+    print()
+
+    # ---------- §Roofline table ----------
+    print("### Roofline (single-pod 16×16, 256 chips)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+          "MODEL/HLO | roof% | bottleneck action |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape, mesh), rec in sorted(
+        base.items(), key=lambda kv: (kv[0][0], SHAPE_ORDER.get(kv[0][1], 9))
+    ):
+        if mesh != "16x16" or "error" in rec:
+            continue
+        r = analyze_record(rec)
+        if r is None:
+            continue
+        print(f"| {arch} | {shape} | {r.compute_s:.3g} | {r.memory_s:.3g} | "
+              f"{r.collective_s:.3g} | **{r.dominant}** | "
+              f"{r.useful_ratio:.2f} | {100*r.roofline_frac:.1f}% | "
+              f"{what_to_do(r, rec)} |")
+    print()
+
+    # ---------- tagged (perf) records ----------
+    tags = sorted({r.get("tag") for r in recs if r.get("tag")})
+    if tags:
+        print("### Tagged §Perf records\n")
+        print("| tag | arch.shape | compute_s | memory_s | collective_s | "
+              "HBM GiB | fit |")
+        print("|---|---|---|---|---|---|---|")
+        for tag in tags:
+            cellmap = latest_by_cell(recs, tag=tag)
+            for (arch, shape, mesh), rec in sorted(cellmap.items()):
+                if "error" in rec:
+                    print(f"| {tag} | {arch}.{shape}@{mesh} | FAIL | | | | |")
+                    continue
+                r = analyze_record(rec)
+                g = hbm_gib(rec)
+                if r is None:
+                    print(f"| {tag} | {arch}.{shape}@{mesh} | — | — | — | "
+                          f"{'-' if g is None else f'{g:.1f}'} | "
+                          f"{'✓' if g and g <= 16 else '✗'} |")
+                    continue
+                print(f"| {tag} | {arch}.{shape}@{mesh} | {r.compute_s:.3g} | "
+                      f"{r.memory_s:.3g} | {r.collective_s:.3g} | "
+                      f"{'-' if g is None else f'{g:.1f}'} | "
+                      f"{'✓' if g and g <= 16 else '✗'} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""CkIO core — the paper's contribution: two-phase, split-phase parallel file
+input with reader/consumer decomposition independence, greedy read sessions,
+splintered I/O, work-stealing straggler mitigation, and migratable consumers.
+"""
+from repro.core.api import CkIO
+from repro.core.autotune import AutoTuner, suggest_num_readers
+from repro.core.buffers import BufferReaderSet, NetworkModel, ReaderOptions
+from repro.core.futures import CkCallback, CkFuture
+from repro.core.migration import Client, LocationManager, VirtualProxy
+from repro.core.scheduler import BackgroundWorker, TaskScheduler
+from repro.core.session import FileHandle, FileOptions, Session
+from repro.core.assembler import ReadComplete
+
+__all__ = [
+    "CkIO",
+    "AutoTuner",
+    "suggest_num_readers",
+    "BufferReaderSet",
+    "NetworkModel",
+    "ReaderOptions",
+    "CkCallback",
+    "CkFuture",
+    "Client",
+    "LocationManager",
+    "VirtualProxy",
+    "BackgroundWorker",
+    "TaskScheduler",
+    "FileHandle",
+    "FileOptions",
+    "Session",
+    "ReadComplete",
+]

@@ -1,0 +1,183 @@
+"""CkIO public API — the paper's §III-D interface, adapted to Python/JAX.
+
+The five split-phase operations mirror the paper exactly:
+
+    ckio.open(name, opened_cb, opts)            Ck::IO::open
+    ckio.start_read_session(file, bytes,
+                            offset, ready_cb)   Ck::IO::startReadSession
+    ckio.read(session, bytes, offset,
+              data, after_read_cb)              Ck::IO::read
+    ckio.close_read_session(session, cb)        Ck::IO::closeReadSession
+    ckio.close(file, cb)                        Ck::IO::close
+
+Every callback is *enqueued as a task* on its target PE (or routed through a
+migratable client's virtual proxy) — no operation blocks a PE. Futures-based
+sugar (``open_sync``, ``read_future``, ...) is provided for driver code and
+tests; the futures pump the scheduler, preserving split-phase semantics.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Union
+
+from repro.core.director import Director
+from repro.core.futures import CkCallback, CkFuture
+from repro.core.migration import Client, LocationManager
+from repro.core.scheduler import TaskScheduler
+from repro.core.session import FileHandle, FileOptions, Session
+
+
+def _to_cb(cb: Union[CkCallback, CkFuture, None], default_pe: int = 0) -> CkCallback:
+    if isinstance(cb, CkCallback):
+        return cb
+    if isinstance(cb, CkFuture):
+        return CkCallback(lambda *a: cb.set(a[0] if a else None), inline=True)
+    if cb is None:
+        return CkCallback(lambda *a: None, inline=True)
+    raise TypeError(f"expected CkCallback/CkFuture/None, got {type(cb)}")
+
+
+class CkIO:
+    """Library facade: one instance per 'job' (owns scheduler + director)."""
+
+    def __init__(
+        self,
+        num_pes: int = 1,
+        pes_per_node: int = 1,
+        sched: Optional[TaskScheduler] = None,
+    ):
+        self.sched = sched or TaskScheduler(num_pes, pes_per_node)
+        self.director = Director(self.sched)
+        self.locations = LocationManager(self.sched)
+
+    # -- paper API (split-phase) ------------------------------------------------
+    def open(
+        self,
+        name: str,
+        opened: Union[CkCallback, CkFuture, None] = None,
+        opts: Optional[FileOptions] = None,
+    ) -> None:
+        self.director.open_file(name, opts or FileOptions(), _to_cb(opened))
+
+    def start_read_session(
+        self,
+        file: FileHandle,
+        nbytes: int,
+        offset: int,
+        ready: Union[CkCallback, CkFuture, None] = None,
+        consumer_pes: Optional[List[int]] = None,
+        sequenced: bool = False,
+    ) -> None:
+        self.director.start_session(
+            file, nbytes, offset, _to_cb(ready), consumer_pes, sequenced
+        )
+
+    def read(
+        self,
+        session: Session,
+        nbytes: int,
+        offset: int,
+        data: Any,
+        after_read: Union[CkCallback, CkFuture, None],
+        client: Optional[Client] = None,
+    ) -> None:
+        """Split-phase read of ``[offset, offset+nbytes)`` into ``data``.
+
+        ``offset`` is absolute within the file (the paper's API takes offsets
+        "with respect to the overall file the session corresponds to").
+        If ``client`` is given, completion is routed through its virtual proxy
+        (survives migration) and the request is assembled on the client's
+        *current* PE.
+        """
+        if session.closed:
+            raise RuntimeError("read() on closed session")
+        if not session.contains(offset, nbytes):
+            raise ValueError(
+                f"read [{offset}, {offset+nbytes}) outside session "
+                f"[{session.offset}, {session.offset+session.nbytes})"
+            )
+        cb = _to_cb(after_read)
+        if client is not None and cb.inline is False and cb.proxy is None:
+            # prefer proxy routing when a client is identified
+            cb = client.callback(cb.fn)
+        pe = client.pe if client is not None else 0
+        assembler = self.director.managers[pe].assembler
+        assembler.submit(session, offset, nbytes, data, cb)
+
+    def close_read_session(
+        self,
+        session: Session,
+        after_end: Union[CkCallback, CkFuture, None] = None,
+    ) -> None:
+        self.director.close_session(session, _to_cb(after_end))
+
+    def close(
+        self, file: FileHandle, closed: Union[CkCallback, CkFuture, None] = None
+    ) -> None:
+        self.director.close_file(file, _to_cb(closed))
+
+    # -- futures sugar ------------------------------------------------------------
+    def open_sync(
+        self, name: str, opts: Optional[FileOptions] = None, timeout: float = 60.0
+    ) -> FileHandle:
+        f: CkFuture = CkFuture()
+        self.open(name, f, opts)
+        return f.wait(self.sched, timeout=timeout)
+
+    def start_read_session_sync(
+        self,
+        file: FileHandle,
+        nbytes: int,
+        offset: int = 0,
+        timeout: float = 60.0,
+        **kw: Any,
+    ) -> Session:
+        f: CkFuture = CkFuture()
+        self.start_read_session(file, nbytes, offset, f, **kw)
+        return f.wait(self.sched, timeout=timeout)
+
+    def read_future(
+        self,
+        session: Session,
+        nbytes: int,
+        offset: int,
+        data: Optional[Any] = None,
+        client: Optional[Client] = None,
+    ) -> CkFuture:
+        if data is None:
+            data = bytearray(nbytes)
+        f: CkFuture = CkFuture()
+        self.read(session, nbytes, offset, data, f, client=client)
+        return f
+
+    def read_sync(
+        self,
+        session: Session,
+        nbytes: int,
+        offset: int,
+        data: Optional[Any] = None,
+        client: Optional[Client] = None,
+        timeout: float = 120.0,
+    ) -> Any:
+        f = self.read_future(session, nbytes, offset, data, client)
+        return f.wait(self.sched, timeout=timeout).data
+
+    def close_read_session_sync(self, session: Session, timeout: float = 60.0) -> None:
+        f: CkFuture = CkFuture()
+        self.close_read_session(session, f)
+        f.wait(self.sched, timeout=timeout)
+
+    def close_sync(self, file: FileHandle, timeout: float = 60.0) -> None:
+        f: CkFuture = CkFuture()
+        self.close(file, f)
+        f.wait(self.sched, timeout=timeout)
+
+    # -- clients ------------------------------------------------------------------
+    def make_client(self, pe: int = 0) -> Client:
+        return Client(self.locations, pe)
+
+    # -- scheduler passthrough ------------------------------------------------------
+    def pump(self, max_tasks: Optional[int] = None) -> int:
+        return self.sched.pump(max_tasks)
+
+    def run_until(self, predicate, *, timeout: float = 60.0) -> None:
+        self.sched.run_until(predicate, timeout=timeout)

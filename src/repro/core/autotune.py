@@ -1,0 +1,66 @@
+"""Reader-count selection (paper future-work §VI-A, implemented).
+
+Two pieces:
+
+* ``suggest_num_readers`` — a closed-form heuristic from file size and
+  machine shape. The paper's Figs. 1/4 show a U-curve: too few readers miss
+  disk parallelism, too many congest the FS with small requests. The
+  heuristic targets a fixed bytes-per-reader chunk (large enough for
+  streaming bandwidth) bounded by [1 per node, 2 per PE].
+* ``AutoTuner`` — online refinement: records (num_readers → throughput)
+  observations across sessions and explores the power-of-two neighbourhood
+  of the current best (the search-based approach of Behzad et al. [4] that
+  the paper cites, restricted to a single knob).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+def suggest_num_readers(
+    file_bytes: int,
+    num_pes: int,
+    num_nodes: int = 1,
+    target_chunk_bytes: int = 64 * 1024 * 1024,
+) -> int:
+    if file_bytes <= 0:
+        return 1
+    by_chunk = max(1, (file_bytes + target_chunk_bytes - 1) // target_chunk_bytes)
+    lo = max(1, num_nodes)            # at least one independent path per node
+    hi = max(lo, 2 * num_pes)         # paper Fig. 4: beyond ~2/PE only adds contention
+    return int(min(max(by_chunk, lo), hi))
+
+
+@dataclass
+class AutoTuner:
+    """Online power-of-two hillclimb over the reader count."""
+
+    num_pes: int
+    num_nodes: int = 1
+    observations: Dict[int, List[float]] = field(default_factory=dict)
+    _trial_queue: List[int] = field(default_factory=list)
+
+    def record(self, num_readers: int, throughput: float) -> None:
+        self.observations.setdefault(num_readers, []).append(throughput)
+
+    def _score(self, r: int) -> float:
+        obs = self.observations.get(r, [])
+        return sum(obs) / len(obs) if obs else float("-inf")
+
+    def best(self) -> Optional[int]:
+        if not self.observations:
+            return None
+        return max(self.observations, key=self._score)
+
+    def suggest(self, file_bytes: int) -> int:
+        seed = suggest_num_readers(file_bytes, self.num_pes, self.num_nodes)
+        if not self.observations:
+            return seed
+        best = self.best()
+        assert best is not None
+        # explore the untried half/double neighbour with the best prior
+        for cand in (best, max(1, best // 2), best * 2):
+            if cand not in self.observations and cand <= 4 * self.num_pes:
+                return cand
+        return best

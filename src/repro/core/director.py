@@ -1,0 +1,169 @@
+"""Director + Manager groups (paper §III-C.1/2).
+
+The Director is the singleton coordinator: it owns the file/session tables,
+allocates ids ("tags"), runs the session-start broadcast, and performs any
+global sequencing between sessions of distinct files (paper: reduce FS
+contention by serializing sessions when asked). Managers are the per-PE
+group members: each holds its PE's ReadAssembler and acks session broadcasts;
+the last ack triggers the user's ``ready`` callback — mirroring the paper's
+"once all the buffer chares have finished initiating their read".
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Callable, Dict, List, Optional
+
+from repro.core.assembler import ReadAssembler
+from repro.core.buffers import BufferReaderSet
+from repro.core.futures import CkCallback
+from repro.core.placement import place_readers
+from repro.core.scheduler import TaskScheduler
+from repro.core.session import FileHandle, FileOptions, Session
+from repro.core.autotune import suggest_num_readers
+from repro.io.layout import plan_session
+from repro.io.posix import PosixFile
+
+
+class Manager:
+    """Per-PE service chare (group member)."""
+
+    def __init__(self, sched: TaskScheduler, pe: int):
+        self.pe = pe
+        self.assembler = ReadAssembler(sched, pe)
+        self.sessions: Dict[int, Session] = {}
+
+    def register_session(self, session: Session) -> None:
+        self.sessions[session.id] = session
+
+    def forget_session(self, session_id: int) -> None:
+        self.sessions.pop(session_id, None)
+
+
+class Director:
+    """Global coordinator chare."""
+
+    def __init__(self, sched: TaskScheduler):
+        self.sched = sched
+        self.managers: List[Manager] = [
+            Manager(sched, pe) for pe in range(sched.num_pes)
+        ]
+        self._file_ids = itertools.count()
+        self._session_ids = itertools.count()
+        self._lock = threading.Lock()
+        self.files: Dict[int, FileHandle] = {}
+        self.sessions: Dict[int, Session] = {}
+        # optional global sequencing: serialize session *starts* per group key
+        self._sequence_lock = threading.Lock()
+
+    # -- files ---------------------------------------------------------------
+    def open_file(
+        self, path: str, opts: FileOptions, opened: CkCallback
+    ) -> None:
+        def do_open() -> None:
+            posix = PosixFile.open(path)
+            with self._lock:
+                fid = next(self._file_ids)
+                handle = FileHandle(id=fid, path=path, posix=posix, opts=opts)
+                self.files[fid] = handle
+            opened.send(self.sched, handle)
+
+        # Opening is itself split-phase: runs as a task on PE 0.
+        self.sched.enqueue(0, do_open, label="ckio-open")
+
+    def close_file(self, handle: FileHandle, closed: CkCallback) -> None:
+        def do_close() -> None:
+            handle.posix.close()
+            with self._lock:
+                self.files.pop(handle.id, None)
+            closed.send(self.sched)
+
+        self.sched.enqueue(0, do_close, label="ckio-close")
+
+    # -- sessions --------------------------------------------------------------
+    def start_session(
+        self,
+        file: FileHandle,
+        nbytes: int,
+        offset: int,
+        ready: CkCallback,
+        consumer_pes: Optional[List[int]] = None,
+        sequenced: bool = False,
+    ) -> None:
+        opts = file.opts
+        num_readers = opts.num_readers or suggest_num_readers(
+            nbytes, self.sched.num_pes, self.sched.num_nodes
+        )
+
+        def do_start() -> None:
+            if sequenced:
+                # Global coordination (paper §III-C.1): serialize the greedy
+                # read kick-off of concurrent sessions on distinct files.
+                self._sequence_lock.acquire()
+            plan = plan_session(
+                offset, nbytes, num_readers, splinter_bytes=opts.splinter_bytes
+            )
+            reader_pes = place_readers(
+                opts.placement, plan.num_readers, self.sched, consumer_pes
+            )
+            with self._lock:
+                sid = next(self._session_ids)
+            readers = BufferReaderSet(
+                file.posix, plan, self.sched, reader_pes, opts.reader_options()
+            )
+            session = Session(
+                id=sid,
+                file=file,
+                plan=plan,
+                readers=readers,
+                opts=opts,
+                reader_pes=reader_pes,
+                metrics=readers.metrics,
+            )
+            with self._lock:
+                self.sessions[sid] = session
+            # Greedy prefetch begins NOW — before any client request exists.
+            readers.start()
+            if sequenced:
+                self._sequence_lock.release()
+
+            # Broadcast to the Manager group; last ack fires `ready`.
+            acks = {"n": 0}
+            npes = self.sched.num_pes
+
+            def make_register(pe: int) -> Callable[[], None]:
+                def register() -> None:
+                    self.managers[pe].register_session(session)
+                    acks["n"] += 1
+                    if acks["n"] == npes:
+                        ready.send(self.sched, session)
+
+                return register
+
+            for pe in range(npes):
+                self.sched.enqueue(pe, make_register(pe), label="ckio-bcast")
+
+        self.sched.enqueue(0, do_start, label="ckio-start-session")
+
+    def close_session(self, session: Session, after: CkCallback) -> None:
+        def do_close() -> None:
+            session.readers.cancel()
+            session.closed = True
+            with self._lock:
+                self.sessions.pop(session.id, None)
+            acks = {"n": 0}
+            npes = self.sched.num_pes
+
+            def make_forget(pe: int) -> Callable[[], None]:
+                def forget() -> None:
+                    self.managers[pe].forget_session(session.id)
+                    acks["n"] += 1
+                    if acks["n"] == npes:
+                        after.send(self.sched)
+
+                return forget
+
+            for pe in range(npes):
+                self.sched.enqueue(pe, make_forget(pe), label="ckio-close-bcast")
+
+        self.sched.enqueue(0, do_close, label="ckio-close-session")

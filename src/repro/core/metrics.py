@@ -1,0 +1,98 @@
+"""Instrumentation for CkIO: per-session counters and timings.
+
+Everything the paper's evaluation plots (throughput, overlap fraction,
+permutation cost, cross-node traffic) is derived from these counters.
+Thread-safe; negligible overhead (integer adds under a lock).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass
+class SessionMetrics:
+    lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    session_bytes: int = 0
+    num_readers: int = 0
+    t_start: float = 0.0
+    t_last_read: float = 0.0
+    read_calls: int = 0
+    bytes_read: int = 0
+    read_time_s: float = 0.0          # summed per-call wall time (across threads)
+    bytes_per_reader: Dict[int, int] = field(default_factory=dict)
+    steals: int = 0
+    # phase-2 (permutation/delivery) accounting
+    pieces_served: int = 0
+    bytes_served: int = 0
+    cross_node_bytes: int = 0
+    permute_time_s: float = 0.0
+    requests: int = 0
+    request_latencies_s: List[float] = field(default_factory=list)
+
+    def session_started(self, nbytes: int, num_readers: int) -> None:
+        with self.lock:
+            self.session_bytes = nbytes
+            self.num_readers = num_readers
+            self.t_start = time.perf_counter()
+
+    def record_read(self, reader: int, nbytes: int, dt: float) -> None:
+        with self.lock:
+            self.read_calls += 1
+            self.bytes_read += nbytes
+            self.read_time_s += dt
+            self.t_last_read = time.perf_counter()
+            self.bytes_per_reader[reader] = (
+                self.bytes_per_reader.get(reader, 0) + nbytes
+            )
+
+    def record_piece(self, nbytes: int, cross_node: bool, dt: float) -> None:
+        with self.lock:
+            self.pieces_served += 1
+            self.bytes_served += nbytes
+            if cross_node:
+                self.cross_node_bytes += nbytes
+            self.permute_time_s += dt
+
+    def record_request(self, latency_s: float) -> None:
+        with self.lock:
+            self.requests += 1
+            self.request_latencies_s.append(latency_s)
+
+    # -- derived -------------------------------------------------------------
+    def ingest_seconds(self) -> float:
+        """Wall time from session start to last byte read."""
+        if self.t_last_read == 0.0:
+            return 0.0
+        return self.t_last_read - self.t_start
+
+    def throughput_bytes_per_s(self) -> float:
+        t = self.ingest_seconds()
+        return self.bytes_read / t if t > 0 else 0.0
+
+    def imbalance(self) -> float:
+        """max/mean bytes per reader — straggler indicator."""
+        if not self.bytes_per_reader:
+            return 0.0
+        vals = list(self.bytes_per_reader.values())
+        mean = sum(vals) / len(vals)
+        return max(vals) / mean if mean else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "session_bytes": float(self.session_bytes),
+            "num_readers": float(self.num_readers),
+            "read_calls": float(self.read_calls),
+            "bytes_read": float(self.bytes_read),
+            "ingest_s": self.ingest_seconds(),
+            "throughput_MBps": self.throughput_bytes_per_s() / 1e6,
+            "steals": float(self.steals),
+            "pieces_served": float(self.pieces_served),
+            "bytes_served": float(self.bytes_served),
+            "cross_node_bytes": float(self.cross_node_bytes),
+            "permute_time_s": self.permute_time_s,
+            "requests": float(self.requests),
+            "imbalance": self.imbalance(),
+        }

@@ -1,0 +1,103 @@
+"""Migratable clients: LocationManager + VirtualProxy.
+
+Charm++ chares migrate between PEs under RTS control while holding open file
+and session handles; CkIO keeps their reads working by addressing callbacks to
+the *virtual* chare proxy rather than a physical PE (paper §IV-A.3). We
+reproduce that: consumers register with a ``LocationManager`` under a virtual
+id; a ``VirtualProxy`` resolves the id to the current PE at *delivery* time.
+``migrate()`` just updates the table — in-flight reads complete at the new
+location, which the migration test and benchmark (paper Fig. 10–12) verify.
+
+The same mechanism backs *elastic scaling* in the training pipeline: when the
+consumer count or host set changes, consumers are re-registered (migrated)
+and the reader layer is untouched.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Optional
+
+from repro.core.scheduler import TaskScheduler
+
+
+class LocationManager:
+    """Virtual-id → current-PE table (thread-safe)."""
+
+    def __init__(self, sched: TaskScheduler):
+        self.sched = sched
+        self._lock = threading.Lock()
+        self._where: Dict[int, int] = {}
+        self._next_vid = 0
+        self.migrations = 0
+
+    def register(self, pe: int, vid: Optional[int] = None) -> int:
+        with self._lock:
+            if vid is None:
+                vid = self._next_vid
+                self._next_vid += 1
+            if not (0 <= pe < self.sched.num_pes):
+                raise ValueError(f"PE {pe} out of range")
+            self._where[vid] = pe
+            self._next_vid = max(self._next_vid, vid + 1)
+            return vid
+
+    def migrate(self, vid: int, new_pe: int) -> None:
+        with self._lock:
+            if vid not in self._where:
+                raise KeyError(f"unknown virtual id {vid}")
+            if not (0 <= new_pe < self.sched.num_pes):
+                raise ValueError(f"PE {new_pe} out of range")
+            self._where[vid] = new_pe
+            self.migrations += 1
+
+    def lookup(self, vid: int) -> int:
+        with self._lock:
+            return self._where[vid]
+
+    def proxy(self, vid: int) -> "VirtualProxy":
+        return VirtualProxy(self, vid)
+
+
+class VirtualProxy:
+    """Late-binding handle to a migratable consumer."""
+
+    __slots__ = ("loc", "vid")
+
+    def __init__(self, loc: LocationManager, vid: int):
+        self.loc = loc
+        self.vid = vid
+
+    def current_pe(self) -> int:
+        return self.loc.lookup(self.vid)
+
+    def current_node(self) -> int:
+        return self.loc.sched.node_of(self.current_pe())
+
+
+class Client:
+    """Base class for migratable data consumers (the paper's client chares).
+
+    Holds a virtual id; exposes ``callback(fn)`` which builds a CkCallback
+    routed through the proxy, so continuations chase the client across
+    migrations.
+    """
+
+    def __init__(self, loc: LocationManager, pe: int):
+        self.loc = loc
+        self.vid = loc.register(pe)
+
+    @property
+    def pe(self) -> int:
+        return self.loc.lookup(self.vid)
+
+    @property
+    def node(self) -> int:
+        return self.loc.sched.node_of(self.pe)
+
+    def migrate(self, new_pe: int) -> None:
+        self.loc.migrate(self.vid, new_pe)
+
+    def callback(self, fn: Callable) -> "CkCallback":
+        from repro.core.futures import CkCallback
+
+        return CkCallback(fn, proxy=self.loc.proxy(self.vid))

@@ -1,0 +1,44 @@
+"""Reader placement policies (paper §III-C.4 + future-work §VI-B).
+
+Maps each buffer reader of a session to a PE. Policies:
+
+* ``round_robin`` — readers cycle over PEs in index order.
+* ``node_spread`` — spread readers across *nodes* first, then PEs within a
+  node; maximizes independent I/O paths when each node has its own storage
+  connection (the common Lustre-router topology the paper runs on).
+* ``near_consumers`` — co-locate readers with a provided consumer PE list,
+  minimizing phase-2 cross-node traffic (the locality play of paper Fig. 10–12,
+  from the reader side instead of migrating the client).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.core.scheduler import TaskScheduler
+
+
+def place_readers(
+    policy: str,
+    num_readers: int,
+    sched: TaskScheduler,
+    consumer_pes: Optional[Sequence[int]] = None,
+) -> List[int]:
+    if num_readers < 1:
+        raise ValueError("num_readers must be >= 1")
+    if policy == "round_robin":
+        return [r % sched.num_pes for r in range(num_readers)]
+    if policy == "node_spread":
+        nodes = sched.num_nodes
+        ppn = sched.pes_per_node
+        out = []
+        for r in range(num_readers):
+            node = r % nodes
+            slot = (r // nodes) % ppn
+            pe = min(node * ppn + slot, sched.num_pes - 1)
+            out.append(pe)
+        return out
+    if policy == "near_consumers":
+        if not consumer_pes:
+            return place_readers("node_spread", num_readers, sched)
+        return [consumer_pes[r % len(consumer_pes)] for r in range(num_readers)]
+    raise ValueError(f"unknown placement policy: {policy!r}")

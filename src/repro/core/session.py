@@ -1,0 +1,75 @@
+"""Read sessions: handles, options, lifecycle state (paper §III-A)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.core.buffers import BufferReaderSet, NetworkModel, ReaderOptions
+from repro.core.metrics import SessionMetrics
+from repro.io.layout import StripePlan
+from repro.io.posix import PosixFile
+
+
+@dataclass
+class FileOptions:
+    """Paper: ``Ck::IO::Options`` — ``numReaders`` is the headline knob."""
+
+    num_readers: Optional[int] = None       # None → autotuned (§VI-A)
+    splinter_bytes: int = 8 * 1024 * 1024
+    work_stealing: bool = True
+    max_io_threads: int = 64
+    placement: str = "node_spread"          # see core/placement.py
+    network: Optional[NetworkModel] = None
+    delay_model: object = None              # test hook, forwarded to readers
+
+    def reader_options(self) -> ReaderOptions:
+        return ReaderOptions(
+            splinter_bytes=self.splinter_bytes,
+            work_stealing=self.work_stealing,
+            max_io_threads=self.max_io_threads,
+            delay_model=self.delay_model,  # type: ignore[arg-type]
+            network=self.network,
+        )
+
+
+@dataclass
+class FileHandle:
+    """Returned by ``CkIO.open`` (paper: ``Ck::IO::File``)."""
+
+    id: int
+    path: str
+    posix: PosixFile
+    opts: FileOptions
+
+    @property
+    def size(self) -> int:
+        return self.posix.size
+
+
+@dataclass
+class Session:
+    """Live read session (paper: ``Ck::IO::Session``)."""
+
+    id: int
+    file: FileHandle
+    plan: StripePlan
+    readers: BufferReaderSet
+    opts: FileOptions
+    reader_pes: List[int]
+    metrics: SessionMetrics = field(default_factory=SessionMetrics)
+    closed: bool = False
+
+    @property
+    def offset(self) -> int:
+        return self.plan.offset
+
+    @property
+    def nbytes(self) -> int:
+        return self.plan.nbytes
+
+    @property
+    def num_readers(self) -> int:
+        return self.plan.num_readers
+
+    def contains(self, abs_off: int, nbytes: int) -> bool:
+        return abs_off >= self.plan.offset and abs_off + nbytes <= self.plan.end

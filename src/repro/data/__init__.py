@@ -1,0 +1,28 @@
+"""Training data pipeline built on CkIO read sessions."""
+from repro.data.tokenfile import (
+    TokenFileMeta,
+    write_token_file,
+    read_meta,
+    decode_rows,
+)
+from repro.data.packing import batch_from_tokens, pack_documents, window_rows
+from repro.data.pipeline import CkIOPipeline
+from repro.data.synthetic import (
+    make_embedding_file,
+    make_opaque_file,
+    make_token_file,
+)
+
+__all__ = [
+    "TokenFileMeta",
+    "write_token_file",
+    "read_meta",
+    "decode_rows",
+    "batch_from_tokens",
+    "pack_documents",
+    "window_rows",
+    "CkIOPipeline",
+    "make_embedding_file",
+    "make_opaque_file",
+    "make_token_file",
+]

@@ -1,0 +1,61 @@
+"""Sequence packing / label construction for LM training batches."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def window_rows(step: int, global_batch: int, seq_len: int) -> Tuple[int, int]:
+    """Token rows needed for training step ``step``.
+
+    Each step consumes ``global_batch`` sequences of ``seq_len + 1`` tokens
+    (inputs + shifted labels share the window). Returns (start_row, num_rows).
+    """
+    rows_per_step = global_batch * (seq_len + 1)
+    return step * rows_per_step, rows_per_step
+
+
+def batch_from_tokens(
+    tokens: np.ndarray, global_batch: int, seq_len: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Flat token window -> (inputs, labels), both (global_batch, seq_len)."""
+    need = global_batch * (seq_len + 1)
+    if tokens.size < need:
+        raise ValueError(f"window too small: {tokens.size} < {need}")
+    seqs = tokens[:need].reshape(global_batch, seq_len + 1)
+    # views, not copies: device_put handles strided arrays, and the extra
+    # 2x window copies measurably serialize the host pipeline on weak hosts
+    return seqs[:, :-1], seqs[:, 1:]
+
+
+def pack_documents(
+    doc_tokens: list, seq_len: int, eos_id: int, pad_id: int = 0
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Greedy document packing into fixed-length rows with segment ids.
+
+    Returns (packed (N, seq_len), segment_ids (N, seq_len)). Segment ids
+    let attention mask out cross-document positions; unused slots get
+    segment id 0 (= padding).
+    """
+    rows, segs = [], []
+    cur, cur_seg, seg_idx = [], [], 1
+    for doc in doc_tokens:
+        toks = list(doc) + [eos_id]
+        while toks:
+            space = seq_len - len(cur)
+            take = toks[:space]
+            cur.extend(take)
+            cur_seg.extend([seg_idx] * len(take))
+            toks = toks[space:]
+            if len(cur) == seq_len:
+                rows.append(cur)
+                segs.append(cur_seg)
+                cur, cur_seg = [], []
+                seg_idx += 1 if toks else 0
+        seg_idx += 1
+    if cur:
+        pad = seq_len - len(cur)
+        rows.append(cur + [pad_id] * pad)
+        segs.append(cur_seg + [0] * pad)
+    return np.asarray(rows, dtype=np.int32), np.asarray(segs, dtype=np.int32)

@@ -1,0 +1,18 @@
+"""POSIX file layer: pread-based stripe reads, layout math, writers."""
+from repro.io.posix import PosixFile, write_file, DEFAULT_ALIGN
+from repro.io.layout import (
+    StripePlan,
+    Splinter,
+    plan_session,
+    pieces_for_range,
+)
+
+__all__ = [
+    "PosixFile",
+    "write_file",
+    "DEFAULT_ALIGN",
+    "StripePlan",
+    "Splinter",
+    "plan_session",
+    "pieces_for_range",
+]

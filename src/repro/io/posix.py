@@ -1,0 +1,100 @@
+"""Thin POSIX I/O wrapper used by CkIO buffer readers.
+
+All reads are positional (``os.pread``) so a single file descriptor can be
+shared by many reader threads without seek races — this mirrors the paper's
+buffer chares each reading a disjoint section of one shared file. ``os.pread``
+releases the GIL for the duration of the syscall, which is what lets helper
+I/O threads overlap with host-side compute (paper §III-C.4).
+"""
+from __future__ import annotations
+
+import os
+import threading
+from dataclasses import dataclass, field
+
+# Typical FS block size; stripe/splinter boundaries are aligned to this when
+# possible to avoid read-modify-write amplification on the storage side.
+DEFAULT_ALIGN = 4096
+
+
+@dataclass
+class PosixFile:
+    """A shared, positionally-read file handle.
+
+    One instance is shared by every BufferReader of every session on this
+    "node" — matching the paper's model where chares on a node share the file
+    opened by the runtime.
+    """
+
+    path: str
+    fd: int = -1
+    size: int = 0
+    _refcount: int = 0
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    @classmethod
+    def open(cls, path: str) -> "PosixFile":
+        fd = os.open(path, os.O_RDONLY)
+        size = os.fstat(fd).st_size
+        f = cls(path=path, fd=fd, size=size)
+        f._refcount = 1
+        return f
+
+    def addref(self) -> None:
+        with self._lock:
+            self._refcount += 1
+
+    def pread(self, offset: int, nbytes: int) -> bytes:
+        """Positional read; safe from any thread; releases the GIL."""
+        if nbytes <= 0:
+            return b""
+        return os.pread(self.fd, nbytes, offset)
+
+    def pread_into(self, offset: int, view: memoryview) -> int:
+        """Positional read into a caller-provided buffer (one copy total)."""
+        data = os.pread(self.fd, len(view), offset)
+        n = len(data)
+        view[:n] = data
+        return n
+
+    def close(self) -> None:
+        with self._lock:
+            self._refcount -= 1
+            if self._refcount <= 0 and self.fd >= 0:
+                os.close(self.fd)
+                self.fd = -1
+
+    @property
+    def closed(self) -> bool:
+        return self.fd < 0
+
+
+def write_file(path: str, data: bytes, *, sync: bool = False) -> None:
+    """Write a file in one shot (used by benchmarks / data generators)."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(data)
+        if sync:
+            f.flush()
+            os.fsync(f.fileno())
+
+
+def drop_page_cache(path: str) -> bool:
+    """Best-effort eviction of a file from the OS page cache.
+
+    Benchmarks call this between trials so that throughput numbers measure the
+    storage path rather than DRAM. Uses ``posix_fadvise(DONTNEED)``; returns
+    False when unsupported (results then measure warm-cache behaviour, which
+    the benchmark records).
+    """
+    try:
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.posix_fadvise(fd, 0, 0, os.POSIX_FADV_DONTNEED)
+        finally:
+            os.close(fd)
+        return True
+    except (AttributeError, OSError):
+        return False

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute/bandwidth hot spots.
+
+flash_attention — causal/sliding/GQA online-softmax tiling (8/10 archs)
+mamba_scan      — chunked selective scan, carry in VMEM (falcon-mamba)
+rglru_scan      — chunked gated linear recurrence (recurrentgemma)
+reassemble      — CkIO phase-2 block-gather permutation at HBM bandwidth
+
+Each has a pure-jnp oracle in ``ref.py`` and a jit'd wrapper in ``ops.py``
+(TPU: native Pallas; CPU: interpret mode or the reference path).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

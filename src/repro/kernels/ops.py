@@ -1,0 +1,90 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On a TPU backend the Pallas path compiles natively; everywhere else (this
+CPU container, the dry-run's host platform) ``interpret=True`` executes the
+kernel body for correctness, or the pure-jnp reference is used directly via
+``use_pallas=False`` (the default on CPU for speed — interpret mode runs the
+grid in Python). The models call the reference path; kernel tests sweep the
+Pallas path against the oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.mamba_scan import mamba_scan_pallas
+from repro.kernels.reassemble import reassemble_pallas
+from repro.kernels.rglru_scan import rglru_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "use_pallas")
+)
+def flash_attention(
+    q: jax.Array,              # (B, S, H, hd)
+    k: jax.Array,              # (B, S, K, hd)
+    v: jax.Array,              # (B, S, K, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    use_pallas: bool | None = None,
+) -> jax.Array:
+    """Returns (B, S, H, hd)."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    if use:
+        out = flash_attention_bhsd(
+            qt, kt, vt, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, interpret=not _on_tpu(),
+        )
+    else:
+        out = ref.attention_ref(qt, kt, vt, causal=causal, window=window)
+    return out.swapaxes(1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "use_pallas"))
+def mamba_scan(
+    Abar: jax.Array, Bx: jax.Array, C: jax.Array,
+    *, chunk: int = 128, block_d: int = 256, use_pallas: bool | None = None,
+) -> jax.Array:
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return mamba_scan_pallas(
+            Abar, Bx, C, chunk=chunk, block_d=block_d, interpret=not _on_tpu()
+        )
+    return ref.ssm_scan_ref(Abar, Bx, C)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w", "use_pallas"))
+def rglru_scan(
+    a: jax.Array, b: jax.Array,
+    *, chunk: int = 256, block_w: int = 512, use_pallas: bool | None = None,
+) -> jax.Array:
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return rglru_scan_pallas(
+            a, b, chunk=chunk, block_w=block_w, interpret=not _on_tpu()
+        )
+    return ref.lru_scan_ref(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def reassemble(
+    src: jax.Array, idx: jax.Array, *, use_pallas: bool | None = None
+) -> jax.Array:
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return reassemble_pallas(src, idx, interpret=not _on_tpu())
+    return ref.reassemble_ref(src, idx)

@@ -1,0 +1,51 @@
+"""Pallas TPU block-gather: CkIO phase-2 data permutation, on device.
+
+The paper's second phase permutes reader-striped data to consumer order in
+host DRAM. On TPU the right place for that permutation is on-device: the
+striped session buffer is DMA'd to HBM in arrival order, and this kernel
+gathers splinter-sized row blocks into batch-major order at HBM bandwidth.
+
+The splinter->destination map is a scalar-prefetch operand: it parametrizes
+the *source* BlockSpec index map, so each output block is produced by one
+aligned HBM->VMEM->HBM copy of its source block — a pure-bandwidth kernel
+with no compute, which is exactly the roofline shape of the paper's
+"data permutation" cost centre (§V-B).
+
+src (NB, rows, d), idx (NBo,) int32, out (NBo, rows, d): out[i] = src[idx[i]].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, src_ref, out_ref):
+    del idx_ref  # consumed by the index map
+    out_ref[...] = src_ref[...]
+
+
+def reassemble_pallas(
+    src: jax.Array,           # (NB, rows, d)
+    idx: jax.Array,           # (NBo,) int32, values in [0, NB)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    NB, rows, d = src.shape
+    NBo = idx.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(NBo,),
+        in_specs=[
+            pl.BlockSpec((1, rows, d), lambda i, idx_ref: (idx_ref[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, d), lambda i, idx_ref: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((NBo, rows, d), src.dtype),
+        interpret=interpret,
+    )(idx, src)

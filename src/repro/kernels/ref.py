@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,          # (B, H, Sq, hd)
+    k: jax.Array,          # (B, K, Sk, hd)
+    v: jax.Array,          # (B, K, Sk, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    """Dense softmax attention, GQA by head-group folding. fp32 accumulate."""
+    B, H, Sq, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    qf = q.reshape(B, K, G, Sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf) * (hd ** -0.5)
+    Sk = k.shape[2]
+    if causal:
+        i = jnp.arange(Sq)[:, None] + (Sk - Sq)   # align ends
+        j = jnp.arange(Sk)[None, :]
+        m = j <= i
+        if window > 0:
+            m &= (i - j) < window
+        s = jnp.where(m[None, None, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def ssm_scan_ref(
+    Abar: jax.Array,       # (B, S, D, N) fp32
+    Bx: jax.Array,         # (B, S, D, N) fp32
+    C: jax.Array,          # (B, S, N) fp32
+    h0: Optional[jax.Array] = None,
+) -> jax.Array:
+    """y_t = <h_t, C_t>, h_t = Abar_t * h_{t-1} + Bx_t. Returns (B, S, D)."""
+    B, S, D, N = Abar.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D, N), jnp.float32)
+
+    def step(h, xs):
+        a, b, c = xs
+        h = a * h + b
+        return h, jnp.einsum("bdn,bn->bd", h, c)
+
+    _, y = jax.lax.scan(
+        step, h0,
+        (Abar.swapaxes(0, 1), Bx.swapaxes(0, 1), C.swapaxes(0, 1)),
+    )
+    return y.swapaxes(0, 1)
+
+
+def lru_scan_ref(
+    a: jax.Array,          # (B, S, W) fp32 decay in (0,1)
+    b: jax.Array,          # (B, S, W) fp32 input
+    h0: Optional[jax.Array] = None,
+) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t elementwise. Returns all h (B, S, W)."""
+    B, S, W = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    _, h = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return h.swapaxes(0, 1)
+
+
+def reassemble_ref(src: jax.Array, idx: jax.Array) -> jax.Array:
+    """Block-gather: src (NB, rows, d), idx (NBo,) -> out (NBo, rows, d)."""
+    return jnp.take(src, idx, axis=0)

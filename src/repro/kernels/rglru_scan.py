@@ -1,0 +1,64 @@
+"""Pallas TPU chunked gated-linear-recurrence (RG-LRU / Griffin).
+
+h_t = a_t ⊙ h_{t-1} + b_t, elementwise over the channel dim. Same carry-in-
+VMEM structure as ``mamba_scan``: channel tiles are the parallel grid dim,
+sequence chunks sweep sequentially with the (bw,) state held in scratch.
+Emits every h_t (the Griffin block consumes the full recurrent trace).
+
+Grid: (B, nw, nc); blocks a/b/h: (1, Q, bw).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lru_kernel(a_ref, b_ref, h_ref, h_scr, *, q: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _reset():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0].astype(jnp.float32)          # (Q, bw)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        h_ref[0, t, :] = h.astype(h_ref.dtype)
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, q, step, h_scr[...])
+
+
+def rglru_scan_pallas(
+    a: jax.Array,             # (B, S, W) fp32
+    b: jax.Array,             # (B, S, W) fp32
+    *,
+    chunk: int = 256,
+    block_w: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, W = a.shape
+    q = min(chunk, S)
+    bw = min(block_w, W)
+    assert S % q == 0 and W % bw == 0, (S, q, W, bw)
+    nc, nw = S // q, W // bw
+
+    kernel = functools.partial(_lru_kernel, q=q)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nw, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, bw), lambda b_, w, c: (b_, c, w)),
+            pl.BlockSpec((1, q, bw), lambda b_, w, c: (b_, c, w)),
+        ],
+        out_specs=pl.BlockSpec((1, q, bw), lambda b_, w, c: (b_, c, w)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

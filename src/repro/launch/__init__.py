@@ -1,0 +1,1 @@
+"""Launchers: mesh, sharding rules, dry-run, roofline, train/serve drivers."""

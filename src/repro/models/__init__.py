@@ -1,0 +1,4 @@
+"""Model substrate: 10 assigned architectures over shared building blocks."""
+from repro.models.model_zoo import Model, build_model
+
+__all__ = ["Model", "build_model"]

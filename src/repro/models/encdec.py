@@ -1,0 +1,267 @@
+"""Encoder-decoder backbone (whisper-medium, arXiv:2212.04356).
+
+Backbone only, per the assignment: the conv/mel frontend is a stub —
+``input_specs()`` supplies precomputed frame embeddings (B, S_enc, d).
+Whisper idioms kept: pre-LN LayerNorm (with bias), GELU MLPs, learned
+absolute position embeddings (no RoPE), bidirectional encoder self-attention,
+decoder causal self-attention + cross-attention. The decode_32k cell is
+lowered mechanically on this backbone (real Whisper caps target length at
+448 — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.attention import KVCache, attn_init, init_cache
+from repro.models.layers import (
+    embed_init,
+    embed_lookup,
+    layernorm,
+    layernorm_init,
+    mlp_apply,
+    mlp_init,
+    normal_init,
+    shard_act,
+    softmax_xent,
+    unembed_logits,
+)
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pd(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _zero_rope(B, S, hd):
+    # identity rotation: cos=1, sin=0 (whisper has no rope)
+    return jnp.ones((B, S, hd // 2), jnp.float32), jnp.zeros((B, S, hd // 2), jnp.float32)
+
+
+def _scan_or_unroll(cfg, f, init, xs):
+    """lax.scan, or a python unroll when cfg.scan_layers=False (exact HLO
+    cost analysis for the dry run — scan bodies are counted once by XLA)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(f, init, xs)
+    carry = init
+    ys: list = []
+    n = jax.tree.leaves(xs)[0].shape[0]
+    for i in range(n):
+        x_i = jax.tree.map(lambda p: p[i], xs)
+        carry, y = f(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+def init_enc_layer(key, cfg: ModelConfig) -> Dict[str, Any]:
+    pd = _pd(cfg)
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": layernorm_init(cfg.d_model, pd),
+        "attn": attn_init(ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                          cfg.resolved_head_dim, pd, bias=True),
+        "norm2": layernorm_init(cfg.d_model, pd),
+        "ffn": mlp_init(ks[1], cfg.d_model, cfg.d_ff, "gelu", pd),
+    }
+
+
+def init_dec_layer(key, cfg: ModelConfig) -> Dict[str, Any]:
+    pd = _pd(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": layernorm_init(cfg.d_model, pd),
+        "self_attn": attn_init(ks[0], cfg.d_model, cfg.num_heads,
+                               cfg.num_kv_heads, cfg.resolved_head_dim, pd,
+                               bias=True),
+        "norm2": layernorm_init(cfg.d_model, pd),
+        "cross_attn": attn_init(ks[1], cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, cfg.resolved_head_dim, pd,
+                                bias=True),
+        "norm3": layernorm_init(cfg.d_model, pd),
+        "ffn": mlp_init(ks[2], cfg.d_model, cfg.d_ff, "gelu", pd),
+    }
+
+
+def init_model(key, cfg: ModelConfig) -> Dict[str, Any]:
+    pd = _pd(cfg)
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[2], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[3], cfg.num_layers)
+    return {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, pd),
+        "enc_pos": normal_init(ks[1], (cfg.encoder_seq, cfg.d_model), 0.02, pd),
+        "dec_pos": normal_init(ks[4], (cfg.max_position, cfg.d_model), 0.02, pd),
+        "enc_blocks": jax.vmap(lambda k: init_enc_layer(k, cfg))(enc_keys),
+        "dec_blocks": jax.vmap(lambda k: init_dec_layer(k, cfg))(dec_keys),
+        "enc_final": layernorm_init(cfg.d_model, pd),
+        "dec_final": layernorm_init(cfg.d_model, pd),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, d) precomputed frontend embeddings."""
+    dt = _dt(cfg)
+    eps = cfg.norm_eps
+    B, S, _ = frames.shape
+    x = frames.astype(dt) + params["enc_pos"][:S].astype(dt)
+    x = shard_act(x, "batch", None, None)
+    cos, sin = _zero_rope(B, S, cfg.resolved_head_dim)
+
+    def layer(h, lp):
+        a = attn_mod.attention_train(
+            lp["attn"], layernorm(lp["norm1"], h, eps), cos, sin,
+            dtype=dt, eps=eps, causal=False, use_rope=True,
+        )
+        h = h + a
+        f = mlp_apply(lp["ffn"], layernorm(lp["norm2"], h, eps), "gelu", dt)
+        return h + f, None
+
+    x, _ = _scan_or_unroll(cfg, layer, x, params["enc_blocks"])
+    return layernorm(params["enc_final"], x, eps)
+
+
+def decode_train(params, cfg: ModelConfig, tokens: jax.Array,
+                 enc_out: jax.Array, last_only: bool = False) -> jax.Array:
+    """Teacher-forced decoder forward -> logits (B, S_dec, V)."""
+    dt = _dt(cfg)
+    eps = cfg.norm_eps
+    B, S = tokens.shape
+    x = embed_lookup(params["embed"], tokens, dt)
+    x = x + params["dec_pos"][:S].astype(dt)
+    cos, sin = _zero_rope(B, S, cfg.resolved_head_dim)
+
+    def layer(h, lp):
+        a = attn_mod.attention_train(
+            lp["self_attn"], layernorm(lp["norm1"], h, eps), cos, sin,
+            dtype=dt, eps=eps, causal=True, use_rope=True,
+            q_chunk=cfg.attn_q_chunk,
+        )
+        h = h + a
+        kv = attn_mod.cross_kv(lp["cross_attn"], enc_out, dt)
+        c = attn_mod.cross_attention(
+            lp["cross_attn"], layernorm(lp["norm2"], h, eps), kv, dtype=dt
+        )
+        h = h + c
+        f = mlp_apply(lp["ffn"], layernorm(lp["norm3"], h, eps), "gelu", dt)
+        return h + f, None
+
+    x, _ = _scan_or_unroll(cfg, layer, x, params["dec_blocks"])
+    x = layernorm(params["dec_final"], x, eps)
+    if last_only:
+        x = x[:, -1:]     # slice BEFORE unembedding: the full (B, S, V)
+                          # logits tensor is 7 GB/device at 32k prefill
+    return unembed_logits(params["embed"], x, dt)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    enc = encode(params, cfg, batch["embeds"])
+    logits = decode_train(params, cfg, batch["tokens"], enc)
+    xent = softmax_xent(logits, batch["labels"], mode=cfg.xent_mode)
+    return xent, {"xent": xent, "aux": jnp.zeros((), jnp.float32)}
+
+
+def forward_logits(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                   last_only: bool = True) -> jax.Array:
+    enc = encode(params, cfg, batch["embeds"])
+    return decode_train(params, cfg, batch["tokens"], enc,
+                        last_only=last_only)
+
+
+# -- incremental decode ---------------------------------------------------------
+class EncDecState(NamedTuple):
+    self_caches: Any       # stacked KVCache over decoder layers
+    cross_kv: Any          # stacked (k, v) over decoder layers
+    pos: jax.Array
+
+
+def init_decode_state(params, cfg: ModelConfig, frames: jax.Array,
+                      seq_budget: int) -> EncDecState:
+    """Run the encoder, precompute per-layer cross K/V, allocate self caches."""
+    dt = _dt(cfg)
+    enc = encode(params, cfg, frames)
+    B = frames.shape[0]
+
+    def layer_kv(_, lp):
+        return None, attn_mod.cross_kv(lp["cross_attn"], enc, dt)
+
+    _, cross = _scan_or_unroll(cfg, layer_kv, None, params["dec_blocks"])
+
+    def one_cache(_):
+        return init_cache(B, seq_budget, cfg.num_kv_heads,
+                          cfg.resolved_head_dim, dt)
+
+    caches = jax.vmap(one_cache)(jnp.arange(cfg.num_layers))
+    return EncDecState(self_caches=caches, cross_kv=cross,
+                       pos=jnp.asarray(0, jnp.int32))
+
+
+def decode_step(params, cfg: ModelConfig, state: EncDecState,
+                batch: Dict[str, jax.Array]) -> Tuple[jax.Array, EncDecState]:
+    dt = _dt(cfg)
+    eps = cfg.norm_eps
+    tokens = batch["tokens"]                      # (B, 1)
+    B = tokens.shape[0]
+    pos = state.pos
+    x = embed_lookup(params["embed"], tokens, dt)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"].astype(dt), pos, 1, axis=0
+    )
+    cos, sin = _zero_rope(B, 1, cfg.resolved_head_dim)
+
+    def apply_layer(h, lp, cache, ckv):
+        a, new_cache = attn_mod.attention_decode(
+            lp["self_attn"], layernorm(lp["norm1"], h, eps), cache, pos,
+            cos, sin, dtype=dt, eps=eps, use_rope=True,
+        )
+        h = h + a
+        c = attn_mod.cross_attention(
+            lp["cross_attn"], layernorm(lp["norm2"], h, eps), ckv, dtype=dt
+        )
+        h = h + c
+        f = mlp_apply(lp["ffn"], layernorm(lp["norm3"], h, eps), "gelu", dt)
+        return h + f, new_cache
+
+    # caches ride in the scan carry, updated in place (see transformer.py)
+    if cfg.scan_layers:
+        def layer(carry, xs):
+            h, caches = carry
+            lp, ckv, li = xs
+            cache = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, li, 0,
+                                                       keepdims=False), caches)
+            h, new_cache = apply_layer(h, lp, cache, ckv)
+            caches = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), li, 0), caches, new_cache)
+            return (h, caches), None
+
+        (x, new_caches), _ = jax.lax.scan(
+            layer, (x, state.self_caches),
+            (params["dec_blocks"], state.cross_kv,
+             jnp.arange(cfg.num_layers)),
+        )
+    else:
+        new_caches = state.self_caches
+        for li in range(cfg.num_layers):
+            lp = jax.tree.map(lambda p: p[li], params["dec_blocks"])
+            ckv = jax.tree.map(lambda p: p[li], state.cross_kv)
+            cache = jax.tree.map(lambda c: c[li], new_caches)
+            x, nc = apply_layer(x, lp, cache, ckv)
+            new_caches = jax.tree.map(
+                lambda c, n: c.at[li].set(n.astype(c.dtype)), new_caches, nc)
+    x = layernorm(params["dec_final"], x, eps)
+    logits = unembed_logits(params["embed"], x, dt)
+    return logits, EncDecState(self_caches=new_caches,
+                               cross_kv=state.cross_kv, pos=pos + 1)

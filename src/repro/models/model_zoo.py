@@ -1,0 +1,108 @@
+"""Model facade: one interface over decoder-only and enc-dec stacks.
+
+Also home of ``input_specs`` / ``decode_state_specs`` — the
+ShapeDtypeStruct stand-ins the multi-pod dry-run lowers against (weak-type
+correct, shardable, zero allocation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._m = encdec if cfg.is_encdec else transformer
+
+    # -- params ---------------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        return self._m.init_model(key, self.cfg)
+
+    def abstract_params(self):
+        return jax.eval_shape(
+            lambda k: self._m.init_model(k, self.cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
+
+    # -- steps ------------------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        return self._m.loss_fn(params, self.cfg, batch)
+
+    def prefill_logits(self, params, batch) -> jax.Array:
+        return self._m.forward_logits(params, self.cfg, batch)
+
+    def decode(self, params, state, batch):
+        return self._m.decode_step(params, self.cfg, state, batch)
+
+    def init_decode_state(self, params, batch_size: int, seq_budget: int,
+                          frames=None):
+        if self.cfg.is_encdec:
+            assert frames is not None, "enc-dec decode needs encoder frames"
+            return encdec.init_decode_state(params, self.cfg, frames, seq_budget)
+        return transformer.init_decode_state(self.cfg, batch_size, seq_budget)
+
+    # -- dry-run specs --------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        act = jnp.dtype(cfg.dtype)
+        d = cfg.d_model
+        if shape.kind == "decode":
+            batch: Dict[str, jax.ShapeDtypeStruct] = {
+                "tokens": jax.ShapeDtypeStruct((B, 1), i32)
+            }
+            return batch
+        if cfg.is_encdec:
+            batch = {
+                "embeds": jax.ShapeDtypeStruct((B, cfg.encoder_seq, d), act),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        elif cfg.input_mode == "embeddings":
+            batch = {
+                "embeds": jax.ShapeDtypeStruct((B, S, d), act),
+            }
+            if cfg.mrope_sections:
+                batch["positions"] = jax.ShapeDtypeStruct((B, S, 3), i32)
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return batch
+
+    def decode_state_specs(self, shape: ShapeConfig):
+        assert shape.kind == "decode"
+        cfg = self.cfg
+        B, budget = shape.global_batch, shape.seq_len
+        if cfg.is_encdec:
+            p_specs = self.abstract_params()
+            f_spec = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+            return jax.eval_shape(
+                lambda p, f: encdec.init_decode_state(p, cfg, f, budget),
+                p_specs, f_spec,
+            )
+        return jax.eval_shape(
+            lambda: transformer.init_decode_state(cfg, B, budget)
+        )
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_model(name: str) -> Model:
+    from repro.configs.registry import get_config
+
+    return Model(get_config(name))
+
+
+def build_model(cfg_or_name) -> Model:
+    if isinstance(cfg_or_name, str):
+        return _cached_model(cfg_or_name)
+    return Model(cfg_or_name)

@@ -1,0 +1,120 @@
+"""Griffin recurrent block with RG-LRU (recurrentgemma-2b, arXiv:2402.19427).
+
+Block: x -> [gate branch: linear -> GeLU] ⊙ [recurrent branch: linear ->
+causal conv(4) -> RG-LRU] -> output linear.
+
+RG-LRU: r_t = σ(W_r x_t), i_t = σ(W_i x_t),
+        a_t = exp(-c · softplus(Λ) · r_t)          (c = 8)
+        h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training runs the diagonal recurrence as a single associative scan over S
+(cheap: elementwise on (B, S, w)); decode carries (h, conv tail) — O(1) per
+token, which is why recurrentgemma runs the long_500k cell. The gate
+matrices are dense (w×w) rather than RecurrentGemma's block-diagonal heads —
+a ≤0.5 % parameter-count deviation noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import MODEL_AXIS, fan_in_init, shard_act
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array          # (B, w) fp32
+    conv: jax.Array       # (B, cw-1, w)
+
+
+def rglru_init(key, d: int, w: int, conv_width: int, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    # Λ init so that a^c uniform-ish in [0.9, 0.999] (paper appendix)
+    lam = jnp.log(jnp.expm1(-jnp.log(
+        jnp.linspace(0.9, 0.999, w, dtype=jnp.float32)) / _C))
+    return {
+        "wx": fan_in_init(ks[0], (d, w), d, dtype),          # recurrent branch in
+        "wy": fan_in_init(ks[1], (d, w), d, dtype),          # gate branch in
+        "conv_w": fan_in_init(ks[2], (conv_width, w), conv_width, dtype),
+        "conv_b": jnp.zeros((w,), dtype=dtype),
+        "w_r": fan_in_init(ks[3], (w, w), w, dtype),         # recurrence gate
+        "w_i": fan_in_init(ks[4], (w, w), w, dtype),         # input gate
+        "b_r": jnp.zeros((w,), dtype=dtype),
+        "b_i": jnp.zeros((w,), dtype=dtype),
+        "lam": lam.astype(dtype),
+        "wo": fan_in_init(ks[5], (w, d), w, dtype),
+    }
+
+
+def _gates(params: dict, xr: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (a, gated_input) in fp32; xr is the conv output (..., w)."""
+    xf = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_r"].astype(jnp.float32)
+                       + params["b_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ params["w_i"].astype(jnp.float32)
+                       + params["b_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * xf
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    cw = w.shape[0]
+    ch = x.shape[-1]
+    y = jax.lax.conv_general_dilated(
+        x, w[:, None, :], window_strides=(1,), padding=[(cw - 1, 0)],
+        dimension_numbers=("NHC", "HIO", "NHC"), feature_group_count=ch,
+    )
+    return y + b
+
+
+def rglru_apply(params: dict, x: jax.Array, *, dtype) -> jax.Array:
+    """Training/prefill path: x (B, S, d) -> (B, S, d)."""
+    xr = x @ params["wx"].astype(dtype)
+    xr = shard_act(xr, "batch", None, MODEL_AXIS)
+    xr = _causal_conv(xr, params["conv_w"].astype(dtype),
+                      params["conv_b"].astype(dtype))
+    a, bx = _gates(params, xr)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    gate = jax.nn.gelu(x @ params["wy"].astype(dtype))
+    y = (h.astype(dtype) * gate)
+    y = shard_act(y, "batch", None, MODEL_AXIS)
+    return y @ params["wo"].astype(dtype)
+
+
+def rglru_init_state(params: dict, batch: int, conv_width: int, dtype
+                     ) -> RGLRUState:
+    w = params["lam"].shape[0]
+    return RGLRUState(
+        h=jnp.zeros((batch, w), dtype=jnp.float32),
+        conv=jnp.zeros((batch, conv_width - 1, w), dtype=dtype),
+    )
+
+
+def rglru_decode(
+    params: dict,
+    x: jax.Array,          # (B, 1, d)
+    state: RGLRUState,
+    *,
+    dtype,
+) -> Tuple[jax.Array, RGLRUState]:
+    xr = x[:, 0] @ params["wx"].astype(dtype)               # (B, w)
+    win = jnp.concatenate([state.conv, xr[:, None]], axis=1)
+    wc = params["conv_w"].astype(dtype)
+    xr_c = jnp.einsum("bcw,cw->bw", win, wc) + params["conv_b"].astype(dtype)
+    a, bx = _gates(params, xr_c)
+    h = a * state.h + bx
+    gate = jax.nn.gelu(x[:, 0] @ params["wy"].astype(dtype))
+    y = h.astype(dtype) * gate
+    out = (y @ params["wo"].astype(dtype))[:, None]
+    return out, RGLRUState(h=h, conv=win[:, 1:])

@@ -1,0 +1,232 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b, arXiv:2410.05355).
+
+Training uses a *chunked* scan: the sequence is split into chunks of
+``ssm_chunk``; within a chunk the recurrence runs as an associative scan on
+(B, Q, d_inner, n) tensors (bounded memory), and the inter-chunk carry is a
+plain ``lax.scan`` over S/Q steps. This is the TPU adaptation of the paper's
+CUDA selective-scan kernel: chunk-local work is dense and MXU-friendly, the
+sequential dependency is reduced to S/Q carry steps. The Pallas
+``mamba_scan`` kernel implements the same chunking on-device; this module is
+the XLA-native reference path used by the dry-run.
+
+Decode keeps O(1) state per token: conv tail (B, cw-1, d_inner) + SSM state
+(B, d_inner, n) — why falcon-mamba runs the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import MODEL_AXIS, fan_in_init, shard_act
+
+
+class MambaState(NamedTuple):
+    h: jax.Array           # (B, d_inner, n)
+    conv: jax.Array        # (B, cw-1, d_inner)
+
+
+def mamba_init(key, d: int, d_inner: int, state: int, dt_rank: int,
+               conv_width: int, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    A = jnp.tile(jnp.arange(1, state + 1, dtype=jnp.float32), (d_inner, 1))
+    return {
+        "in_proj": fan_in_init(ks[0], (d, 2 * d_inner), d, dtype),
+        "conv_w": fan_in_init(ks[1], (conv_width, d_inner), conv_width, dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype=dtype),
+        "x_proj": fan_in_init(ks[2], (d_inner, dt_rank + 2 * state), d_inner, dtype),
+        "dt_proj": fan_in_init(ks[3], (dt_rank, d_inner), dt_rank, dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((d_inner,), 1e-2))).astype(dtype),
+        "A_log": jnp.log(A).astype(dtype),
+        "D": jnp.ones((d_inner,), dtype=dtype),
+        "out_proj": fan_in_init(ks[4], (d_inner, d), d_inner, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq: x (B,S,di), w (cw,di)."""
+    cw = w.shape[0]
+    di = x.shape[-1]
+    y = jax.lax.conv_general_dilated(
+        x, w[:, None, :],
+        window_strides=(1,), padding=[(cw - 1, 0)],
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=di,
+    )
+    return y + b
+
+
+def _chunked_scan(Abar: jax.Array, Bx: jax.Array, chunk: int,
+                  h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """h_t = Abar_t * h_{t-1} + Bx_t, over axis 1 (S), chunked.
+
+    Abar/Bx: (B, S, di, n). Returns (h (B,S,di,n), h_final (B,di,n)).
+    """
+    B, S, di, n = Abar.shape
+    Q = min(chunk, S)
+    if S % Q:
+        # pad with identity elements (A=1, b=0)
+        pad = Q - S % Q
+        Abar = jnp.pad(Abar, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                       constant_values=1.0)
+        Bx = jnp.pad(Bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = Abar.shape[1] // Q
+    Ac = Abar.reshape(B, nc, Q, di, n).swapaxes(0, 1)   # (nc, B, Q, di, n)
+    Bc = Bx.reshape(B, nc, Q, di, n).swapaxes(0, 1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def chunk_step(h_prev, xs):
+        a, b = xs                                        # (B, Q, di, n)
+        cumA, local = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_all = local + cumA * h_prev[:, None]
+        return h_all[:, -1], h_all
+
+    h_final, h_chunks = jax.lax.scan(chunk_step, h0, (Ac, Bc))
+    h = h_chunks.swapaxes(0, 1).reshape(B, nc * Q, di, n)[:, :S]
+    return h, h_final
+
+
+def _fused_chunk_scan(dt, Bc, Cc, xin, A, chunk: int) -> jax.Array:
+    """Per-chunk discretization + scan + readout (§Perf 'fused' impl).
+
+    The materialized path builds Abar/Bx/h as full (B, S, di, n) tensors —
+    4·S/Q× the HBM traffic of this version, which discretizes and reads out
+    inside the chunk scan so only (B, Q, di, n) is ever live. Per-chunk
+    jax.checkpoint keeps backward memory to one chunk.
+    """
+    B, S, di = dt.shape
+    n = A.shape[1]
+    Q = min(chunk, S)
+    pad = (Q - S % Q) % Q
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // Q
+
+    def to_chunks(t):
+        return t.reshape(B, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    @jax.checkpoint
+    def chunk_step(h_prev, xs):
+        dt_c, Bc_c, Cc_c, x_c = xs                       # (B, Q, ...)
+        Abar = jnp.exp(dt_c[..., None] * A)              # (B, Q, di, n)
+        Bx = (dt_c[..., None] * Bc_c[:, :, None, :]
+              * x_c[..., None].astype(jnp.float32))
+        cumA, local = jax.lax.associative_scan(combine, (Abar, Bx), axis=1)
+        h_all = local + cumA * h_prev[:, None]
+        y_c = jnp.einsum("bqin,bqn->bqi", h_all, Cc_c)
+        return h_all[:, -1], y_c
+
+    _, y = jax.lax.scan(
+        chunk_step,
+        jnp.zeros((B, di, n), jnp.float32),
+        (to_chunks(dt), to_chunks(Bc.astype(jnp.float32)),
+         to_chunks(Cc.astype(jnp.float32)), to_chunks(xin)),
+    )
+    y = y.swapaxes(0, 1).reshape(B, S + pad, di)
+    return y[:, :S]
+
+
+def mamba_apply(
+    params: dict,
+    x: jax.Array,            # (B, S, d)
+    *,
+    dtype,
+    chunk: int = 256,
+    impl: str = "materialized",
+) -> jax.Array:
+    B, S, d = x.shape
+    di = params["A_log"].shape[0]
+    n = params["A_log"].shape[1]
+    r = params["dt_proj"].shape[0]
+
+    xz = x @ params["in_proj"].astype(dtype)              # (B,S,2di)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard_act(xin, "batch", None, MODEL_AXIS)
+    xin = jax.nn.silu(_causal_conv(xin, params["conv_w"].astype(dtype),
+                                   params["conv_b"].astype(dtype)))
+
+    proj = xin @ params["x_proj"].astype(dtype)           # (B,S,r+2n)
+    dt_in, Bc, Cc = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_in @ params["dt_proj"].astype(dtype)
+        + params["dt_bias"].astype(dtype)
+    ).astype(jnp.float32)                                  # (B,S,di)
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))      # (di, n)
+    if impl == "fused":
+        y = _fused_chunk_scan(dt, Bc, Cc, xin, A, chunk).astype(dtype)
+    else:
+        Abar = jnp.exp(dt[..., None] * A)                  # (B,S,di,n)
+        Bx = (dt[..., None] * Bc[:, :, None, :].astype(jnp.float32)
+              * xin[..., None].astype(jnp.float32))
+        h0 = jnp.zeros((B, di, n), dtype=jnp.float32)
+        h, _ = _chunked_scan(Abar, Bx, chunk, h0)
+        y = jnp.einsum("bsin,bsn->bsi", h,
+                       Cc.astype(jnp.float32)).astype(dtype)
+    y = y + params["D"].astype(dtype) * xin
+    y = y * jax.nn.silu(z)
+    y = shard_act(y, "batch", None, MODEL_AXIS)
+    return y @ params["out_proj"].astype(dtype)
+
+
+def mamba_init_state(params: dict, batch: int, conv_width: int, dtype
+                     ) -> MambaState:
+    di, n = params["A_log"].shape
+    return MambaState(
+        h=jnp.zeros((batch, di, n), dtype=jnp.float32),
+        conv=jnp.zeros((batch, conv_width - 1, di), dtype=dtype),
+    )
+
+
+def mamba_decode(
+    params: dict,
+    x: jax.Array,            # (B, 1, d)
+    state: MambaState,
+    *,
+    dtype,
+) -> Tuple[jax.Array, MambaState]:
+    B = x.shape[0]
+    di, n = params["A_log"].shape
+    r = params["dt_proj"].shape[0]
+
+    xz = x[:, 0] @ params["in_proj"].astype(dtype)         # (B, 2di)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    # conv over [state, xin]
+    win = jnp.concatenate([state.conv, xin[:, None, :]], axis=1)  # (B, cw, di)
+    w = params["conv_w"].astype(dtype)                     # (cw, di)
+    xin_c = jax.nn.silu(
+        jnp.einsum("bci,ci->bi", win, w) + params["conv_b"].astype(dtype)
+    )
+    new_conv = win[:, 1:]
+
+    proj = xin_c @ params["x_proj"].astype(dtype)
+    dt_in, Bc, Cc = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_in @ params["dt_proj"].astype(dtype)
+        + params["dt_bias"].astype(dtype)
+    ).astype(jnp.float32)                                   # (B, di)
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    Abar = jnp.exp(dt[..., None] * A)                       # (B, di, n)
+    Bx = (dt[..., None] * Bc[:, None, :].astype(jnp.float32)
+          * xin_c[..., None].astype(jnp.float32))
+    h = Abar * state.h + Bx
+    y = jnp.einsum("bin,bn->bi", h, Cc.astype(jnp.float32)).astype(dtype)
+    y = y + params["D"].astype(dtype) * xin_c
+    y = y * jax.nn.silu(z)
+    out = (y @ params["out_proj"].astype(dtype))[:, None, :]
+    return out, MambaState(h=h, conv=new_conv)

@@ -1,0 +1,11 @@
+"""Serving substrate: prefill/decode steps, generation, request batching."""
+from repro.serve.serve_step import greedy_generate, make_decode_step, make_prefill_step
+from repro.serve.batching import BatchServer, Request
+
+__all__ = [
+    "greedy_generate",
+    "make_decode_step",
+    "make_prefill_step",
+    "BatchServer",
+    "Request",
+]

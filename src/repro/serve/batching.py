@@ -1,0 +1,65 @@
+"""Request batching for the serving example.
+
+Static batching with padding-to-bucket: requests are grouped into batches of
+``batch_size`` with uniform (bucketed) prompt length, each group is prefix-
+replayed then decoded greedily. Input for the request prompts flows through
+a CkIO read session (requests file = one more "single large file read by a
+collection of tasks").
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_zoo import Model
+from repro.serve.serve_step import greedy_generate
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray             # (S,) int32
+    max_new_tokens: int = 16
+    result: Optional[np.ndarray] = None
+    latency_s: float = 0.0
+
+
+@dataclass
+class BatchServer:
+    model: Model
+    params: Any
+    batch_size: int = 4
+    bucket: int = 32               # prompts padded up to a multiple of this
+    stats: Dict[str, float] = field(default_factory=dict)
+
+    def serve(self, requests: List[Request]) -> List[Request]:
+        # bucket by padded length so every batch is uniform
+        by_len: Dict[int, List[Request]] = {}
+        for r in requests:
+            L = max(self.bucket, (len(r.prompt) + self.bucket - 1)
+                    // self.bucket * self.bucket)
+            by_len.setdefault(L, []).append(r)
+        t_all = time.perf_counter()
+        for L, group in sorted(by_len.items()):
+            for i in range(0, len(group), self.batch_size):
+                chunk = group[i : i + self.batch_size]
+                t0 = time.perf_counter()
+                prompts = np.zeros((len(chunk), L), np.int32)
+                for j, r in enumerate(chunk):
+                    prompts[j, L - len(r.prompt):] = r.prompt  # left-pad
+                max_new = max(r.max_new_tokens for r in chunk)
+                out = greedy_generate(
+                    self.model, self.params, jnp.asarray(prompts), max_new
+                )
+                out = np.asarray(out)
+                dt = time.perf_counter() - t0
+                for j, r in enumerate(chunk):
+                    r.result = out[j, : r.max_new_tokens]
+                    r.latency_s = dt
+        self.stats["total_s"] = time.perf_counter() - t_all
+        self.stats["requests"] = float(len(requests))
+        return requests

@@ -1,0 +1,64 @@
+"""Serving steps: jitted prefill + decode, greedy generation loop."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import Model
+
+
+def make_prefill_step(model: Model):
+    @jax.jit
+    def prefill(params, batch):
+        return model.prefill_logits(params, batch)
+
+    return prefill
+
+
+def make_decode_step(model: Model):
+    @jax.jit
+    def decode(params, state, batch):
+        return model.decode(params, state, batch)
+
+    return decode
+
+
+def greedy_generate(
+    model: Model,
+    params: Any,
+    prompt: jax.Array,                # (B, S) int32
+    max_new_tokens: int,
+    *,
+    seq_budget: Optional[int] = None,
+    eos_id: Optional[int] = None,
+    frames: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Static-batch greedy decoding (uniform prompt lengths).
+
+    Prefill primes the decode state by replaying the prompt through
+    ``decode_step`` token by token (correct for every family incl. SSM /
+    RG-LRU state carrying), then greedily samples ``max_new_tokens``.
+    """
+    B, S = prompt.shape
+    budget = seq_budget or (S + max_new_tokens)
+    state = model.init_decode_state(params, B, budget, frames=frames)
+    decode = make_decode_step(model)
+
+    logits = None
+    for t in range(S):
+        logits, state = decode(params, state, {"tokens": prompt[:, t : t + 1]})
+    outs = []
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    done = jnp.zeros((B,), bool)
+    for _ in range(max_new_tokens):
+        outs.append(tok)
+        if eos_id is not None:
+            done = done | (tok[:, 0] == eos_id)
+            if bool(done.all()):
+                break
+        logits, state = decode(params, state, {"tokens": tok})
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    return jnp.concatenate(outs, axis=1)

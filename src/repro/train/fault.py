@@ -1,0 +1,120 @@
+"""Fault tolerance: supervised training loop with checkpoint/restart.
+
+``StepSupervisor`` wraps the jitted train step: it checkpoints every
+``ckpt_every`` steps (async), and on *any* step failure (device error,
+injected fault, preemption signal) restores the latest checkpoint and
+replays from there — bounded by ``max_retries`` consecutive failures.
+Slow-step detection (EMA + threshold) flags stragglers the way the reader
+layer's work stealing handles slow disks; at the training level the remedy
+on a real fleet is re-scheduling the step on spare capacity, which we model
+by re-running the step after logging.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.train.checkpoint import AsyncCheckpointer, restore_tree
+
+
+class FaultInjected(RuntimeError):
+    """Raised by test hooks to simulate a node failure."""
+
+
+@dataclass
+class SupervisorStats:
+    steps_run: int = 0
+    failures: int = 0
+    restores: int = 0
+    straggler_steps: int = 0
+    step_times: List[float] = field(default_factory=list)
+
+
+class StepSupervisor:
+    def __init__(
+        self,
+        step_fn: Callable,               # (state, batch) -> (state, metrics)
+        checkpointer: AsyncCheckpointer,
+        *,
+        ckpt_every: int = 50,
+        max_retries: int = 3,
+        straggler_factor: float = 3.0,
+    ):
+        self.step_fn = step_fn
+        self.ckpt = checkpointer
+        self.ckpt_every = ckpt_every
+        self.max_retries = max_retries
+        self.straggler_factor = straggler_factor
+        self.stats = SupervisorStats()
+        self._ema: Optional[float] = None
+
+    def _maybe_checkpoint(self, state: Any, step: int, force: bool = False) -> None:
+        if force or (step > 0 and step % self.ckpt_every == 0):
+            self.ckpt.save(state, step)
+
+    def _restore(self, like: Any) -> tuple:
+        path = self.ckpt.latest()
+        if path is None:
+            raise RuntimeError("failure before any checkpoint exists")
+        self.ckpt.wait()
+        state, step = restore_tree(path, like)
+        self.stats.restores += 1
+        return state, step
+
+    def run(
+        self,
+        state: Any,
+        batches: Callable[[int], Any],   # step -> batch (replayable!)
+        num_steps: int,
+        *,
+        start_step: int = 0,
+        fault_hook: Optional[Callable[[int], None]] = None,
+        on_metrics: Optional[Callable[[int, Dict], None]] = None,
+    ) -> Any:
+        """Run ``num_steps`` steps with checkpoint/restart semantics.
+
+        ``batches`` must be addressable by step (our CkIO pipeline is: step N
+        maps to a deterministic file window), so replay after restore is
+        consistent — the same property ChaNGa relies on when re-reading its
+        input after a restart.
+        """
+        # initial checkpoint so step-0 failures are recoverable
+        self._maybe_checkpoint(state, start_step, force=True)
+        self.ckpt.wait()
+        step = start_step
+        retries = 0
+        while step < num_steps:
+            try:
+                if fault_hook is not None:
+                    fault_hook(step)
+                t0 = time.perf_counter()
+                state, metrics = self.step_fn(state, batches(step))
+                dt = time.perf_counter() - t0
+                self.stats.step_times.append(dt)
+                if self._ema is None:
+                    self._ema = dt
+                else:
+                    if dt > self.straggler_factor * self._ema:
+                        self.stats.straggler_steps += 1
+                    self._ema = 0.9 * self._ema + 0.1 * dt
+                self.stats.steps_run += 1
+                retries = 0
+                step += 1
+                self._maybe_checkpoint(state, step)
+                if on_metrics is not None:
+                    on_metrics(step, metrics)
+            except (FaultInjected, RuntimeError, OSError) as e:
+                if isinstance(e, RuntimeError) and not isinstance(e, FaultInjected):
+                    # jax runtime errors come through as RuntimeError too
+                    pass
+                self.stats.failures += 1
+                retries += 1
+                if retries > self.max_retries:
+                    raise RuntimeError(
+                        f"step {step}: {retries - 1} consecutive retries exhausted"
+                    ) from e
+                state, step = self._restore(state)
+        self._maybe_checkpoint(state, step, force=True)
+        self.ckpt.wait()
+        return state

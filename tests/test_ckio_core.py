@@ -1,0 +1,237 @@
+"""CkIO core behaviour: correctness under arbitrary decomposition, split-phase
+semantics, migration, straggler mitigation, concurrent sessions, autotuning."""
+import os
+import random
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CkIO,
+    CkFuture,
+    FileOptions,
+    NetworkModel,
+    suggest_num_readers,
+    AutoTuner,
+)
+from repro.core.placement import place_readers
+from repro.core.scheduler import TaskScheduler
+
+
+@pytest.fixture(scope="module")
+def data_file(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("ckio") / "data.bin")
+    rng = np.random.default_rng(42)
+    data = rng.integers(0, 256, size=2_000_000, dtype=np.uint8).tobytes()
+    with open(path, "wb") as f:
+        f.write(data)
+    return path, data
+
+
+def _mk(num_pes=4, **opts):
+    return CkIO(num_pes=num_pes, pes_per_node=2), FileOptions(**opts)
+
+
+def test_whole_file_roundtrip(data_file):
+    path, data = data_file
+    ck, opts = _mk(num_readers=3, splinter_bytes=128 * 1024)
+    fh = ck.open_sync(path, opts)
+    assert fh.size == len(data)
+    sess = ck.start_read_session_sync(fh, fh.size, 0)
+    out = ck.read_sync(sess, fh.size, 0)
+    assert bytes(out) == data
+    ck.close_read_session_sync(sess)
+    ck.close_sync(fh)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    readers=st.integers(1, 9),
+    clients=st.integers(1, 40),
+    splinter_kib=st.sampled_from([4, 64, 512]),
+    seed=st.integers(0, 10**6),
+)
+def test_any_decomposition_reads_correctly(data_file, readers, clients,
+                                           splinter_kib, seed):
+    """The paper's core decoupling claim: ANY (readers × consumers) pair
+    returns byte-identical data."""
+    path, data = data_file
+    ck, opts = _mk(num_readers=readers, splinter_bytes=splinter_kib * 1024)
+    fh = ck.open_sync(path, opts)
+    sess = ck.start_read_session_sync(fh, len(data) // 2, 1000)
+    rng = random.Random(seed)
+    futs, spans = [], []
+    for i in range(clients):
+        off = rng.randrange(1000, 1000 + len(data) // 2 - 2)
+        n = rng.randrange(1, min(100_000, 1000 + len(data) // 2 - off))
+        c = ck.make_client(pe=i % ck.sched.num_pes)
+        futs.append(ck.read_future(sess, n, off, client=c))
+        spans.append((off, n))
+    for f, (off, n) in zip(futs, spans):
+        msg = f.wait(ck.sched, timeout=60)
+        assert bytes(msg.data) == data[off:off + n]
+    ck.close_read_session_sync(sess)
+    ck.close_sync(fh)
+
+
+def test_session_offsets_are_absolute(data_file):
+    path, data = data_file
+    ck, opts = _mk(num_readers=2)
+    fh = ck.open_sync(path, opts)
+    sess = ck.start_read_session_sync(fh, 100_000, 500_000)
+    out = ck.read_sync(sess, 1234, 512_345)
+    assert bytes(out) == data[512_345:512_345 + 1234]
+    ck.close_read_session_sync(sess)
+    ck.close_sync(fh)
+
+
+def test_read_outside_session_rejected(data_file):
+    path, _ = data_file
+    ck, opts = _mk(num_readers=2)
+    fh = ck.open_sync(path, opts)
+    sess = ck.start_read_session_sync(fh, 1000, 0)
+    with pytest.raises(ValueError):
+        ck.read_sync(sess, 10, 995)
+    ck.close_read_session_sync(sess)
+    with pytest.raises(RuntimeError):
+        ck.read_sync(sess, 10, 0)
+    ck.close_sync(fh)
+
+
+def test_greedy_prefetch_before_any_request(data_file):
+    """Buffer readers start on session instantiation (paper Fig. 5)."""
+    path, data = data_file
+    ck, opts = _mk(num_readers=4, splinter_bytes=64 * 1024)
+    fh = ck.open_sync(path, opts)
+    sess = ck.start_read_session_sync(fh, 1_000_000, 0)
+    assert sess.readers.join(timeout=30)       # completes with zero reads issued
+    done, total = sess.readers.progress()
+    assert done == total > 0
+    # a request served from resident data completes without any disk wait
+    out = ck.read_sync(sess, 100, 50)
+    assert bytes(out) == data[50:150]
+    ck.close_read_session_sync(sess)
+    ck.close_sync(fh)
+
+
+def test_migration_mid_session(data_file):
+    """Paper §IV-A.3: migrate a client between two reads of one session."""
+    path, data = data_file
+    ck, opts = _mk(num_pes=4, num_readers=2)
+    fh = ck.open_sync(path, opts)
+    sess = ck.start_read_session_sync(fh, 1_000_000, 0)
+    c = ck.make_client(pe=0)
+    m1 = ck.read_future(sess, 5000, 100, client=c).wait(ck.sched)
+    assert bytes(m1.data) == data[100:5100]
+    c.migrate(3)
+    assert c.pe == 3
+    m2 = ck.read_future(sess, 5000, 600_000, client=c).wait(ck.sched)
+    assert bytes(m2.data) == data[600_000:605_000]
+    assert ck.locations.migrations == 1
+    ck.close_read_session_sync(sess)
+    ck.close_sync(fh)
+
+
+def test_straggler_work_stealing(data_file):
+    """A delayed reader's splinters get stolen; session finishes fast."""
+    path, data = data_file
+    delays = {"n": 0}
+
+    def slow_reader_0(reader, splinter):
+        if reader == 0:
+            delays["n"] += 1
+            return 0.05           # 50 ms per splinter for reader 0
+        return 0.0
+
+    ck = CkIO(num_pes=2)
+    opts = FileOptions(num_readers=4, splinter_bytes=64 * 1024,
+                       work_stealing=True, delay_model=slow_reader_0)
+    fh = ck.open_sync(path, opts)
+    sess = ck.start_read_session_sync(fh, 2_000_000, 0)
+    assert sess.readers.join(timeout=30)
+    assert sess.metrics.steals > 0, "no splinters were stolen from the straggler"
+    out = ck.read_sync(sess, 100_000, 0)
+    assert bytes(out) == data[:100_000]
+    ck.close_read_session_sync(sess)
+    ck.close_sync(fh)
+
+
+def test_concurrent_sessions(data_file):
+    path, data = data_file
+    ck, opts = _mk(num_readers=2, splinter_bytes=64 * 1024)
+    fh = ck.open_sync(path, opts)
+    f1, f2 = CkFuture(), CkFuture()
+    ck.start_read_session(fh, 500_000, 0, f1)
+    ck.start_read_session(fh, 500_000, 1_000_000, f2)
+    s1 = f1.wait(ck.sched)
+    s2 = f2.wait(ck.sched)
+    r1 = ck.read_future(s1, 1000, 100)
+    r2 = ck.read_future(s2, 1000, 1_400_000)
+    assert bytes(r1.wait(ck.sched).data) == data[100:1100]
+    assert bytes(r2.wait(ck.sched).data) == data[1_400_000:1_401_000]
+    ck.close_read_session_sync(s1)
+    ck.close_read_session_sync(s2)
+    ck.close_sync(fh)
+
+
+def test_callbacks_are_split_phase(data_file):
+    """read() must return before the callback runs (no inline completion)."""
+    path, _ = data_file
+    ck, opts = _mk(num_readers=1)
+    fh = ck.open_sync(path, opts)
+    sess = ck.start_read_session_sync(fh, 10_000, 0)
+    sess.readers.join(timeout=10)   # make data resident -> tempting to inline
+    fired = []
+    from repro.core import CkCallback
+
+    buf = bytearray(100)
+    ck.read(sess, 100, 0, buf, CkCallback(lambda m: fired.append(m), pe=0))
+    assert fired == [], "callback ran inline inside read()"
+    ck.sched.run_until(lambda: bool(fired), timeout=10)
+    assert len(fired) == 1
+    ck.close_read_session_sync(sess)
+    ck.close_sync(fh)
+
+
+def test_network_model_cross_node_latency():
+    net = NetworkModel(bw_bytes_per_s=1e9, latency_s=0.01)
+    fired = threading.Event()
+    import time
+
+    t0 = time.perf_counter()
+    net.deliver(1_000_000, same_node=False, fn=fired.set)
+    assert fired.wait(5)
+    dt = time.perf_counter() - t0
+    assert dt >= 0.01, f"cross-node delivery too fast ({dt})"
+    got = []
+    net.deliver(100, same_node=True, fn=lambda: got.append(1))
+    assert got == [1]            # same-node is immediate
+    net.shutdown()
+
+
+def test_placement_policies():
+    sched = TaskScheduler(num_pes=8, pes_per_node=2)  # 4 nodes
+    rr = place_readers("round_robin", 6, sched)
+    assert rr == [0, 1, 2, 3, 4, 5]
+    ns = place_readers("node_spread", 4, sched)
+    assert sorted({sched.node_of(p) for p in ns}) == [0, 1, 2, 3]
+    nc = place_readers("near_consumers", 4, sched, consumer_pes=[5, 6])
+    assert set(nc) <= {5, 6}
+    with pytest.raises(ValueError):
+        place_readers("nope", 2, sched)
+
+
+def test_autotune_heuristic_and_online():
+    # U-curve bounds: at least 1/node, at most 2/PE, ~1 per 64 MB
+    assert suggest_num_readers(1 << 30, num_pes=32, num_nodes=4) == 16
+    assert suggest_num_readers(1 << 20, num_pes=32, num_nodes=4) == 4
+    assert suggest_num_readers(1 << 40, num_pes=32, num_nodes=4) == 64
+    tuner = AutoTuner(num_pes=8, num_nodes=2)
+    first = tuner.suggest(1 << 30)
+    tuner.record(first, 100.0)
+    nxt = tuner.suggest(1 << 30)
+    assert nxt != first                     # explores the neighbourhood
+    tuner.record(nxt, 500.0)
+    assert tuner.best() == nxt

@@ -1,0 +1,111 @@
+"""Token file format, packing, and the CkIO training pipeline."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FileOptions
+from repro.data import (
+    CkIOPipeline,
+    batch_from_tokens,
+    decode_rows,
+    make_embedding_file,
+    make_token_file,
+    pack_documents,
+    read_meta,
+    window_rows,
+    write_token_file,
+)
+
+
+def test_tokenfile_roundtrip(tmp_path):
+    path = str(tmp_path / "t.bin")
+    arr = np.arange(1000, dtype=np.uint32)
+    write_token_file(path, arr)
+    meta = read_meta(path)
+    assert meta.shape == (1000,) and meta.dtype == np.uint32
+    off, n = meta.byte_range_for_rows(10, 5)
+    with open(path, "rb") as f:
+        f.seek(off)
+        got = decode_rows(meta, f.read(n), 10, 5)
+    np.testing.assert_array_equal(got, arr[10:15])
+
+
+def test_embedding_file_rows(tmp_path):
+    path = str(tmp_path / "e.bin")
+    make_embedding_file(path, 64, 16, seed=3)
+    meta = read_meta(path)
+    assert meta.shape == (64, 16)
+    assert meta.row_bytes == 16 * 4
+
+
+def test_window_math():
+    start, n = window_rows(3, global_batch=4, seq_len=8)
+    assert start == 3 * 4 * 9 and n == 4 * 9
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    docs=st.lists(st.lists(st.integers(1, 99), min_size=1, max_size=30),
+                  min_size=1, max_size=10),
+    seq_len=st.integers(4, 16),
+)
+def test_pack_documents_preserves_tokens(docs, seq_len):
+    rows, segs = pack_documents(docs, seq_len, eos_id=100)
+    flat = rows[segs > 0]
+    expect = []
+    for d in docs:
+        expect.extend(d)
+        expect.append(100)
+    assert list(flat[: len(expect)]) == expect[: len(flat)]
+    assert rows.shape == segs.shape and rows.shape[1] == seq_len
+
+
+def test_pipeline_matches_file(tmp_path):
+    path = str(tmp_path / "corpus.bin")
+    make_token_file(path, 50_000, vocab_size=777, seed=5)
+    raw = np.fromfile(path, dtype=np.uint32, offset=4096)
+    pipe = CkIOPipeline(path, global_batch=4, seq_len=64, num_pes=2,
+                        num_consumers=10,
+                        file_opts=FileOptions(num_readers=3,
+                                              splinter_bytes=16 * 1024))
+    need = 4 * 65
+    for s in range(min(pipe.num_steps, 5)):
+        x, y = pipe.get_batch(s)
+        ref = raw[s * need:(s + 1) * need].reshape(4, 65)
+        np.testing.assert_array_equal(x, ref[:, :-1])
+        np.testing.assert_array_equal(y, ref[:, 1:])
+    pipe.close()
+
+
+def test_pipeline_elastic_resize_and_migration(tmp_path):
+    path = str(tmp_path / "corpus2.bin")
+    make_token_file(path, 40_000, vocab_size=100, seed=6)
+    raw = np.fromfile(path, dtype=np.uint32, offset=4096)
+    pipe = CkIOPipeline(path, global_batch=2, seq_len=32, num_pes=4,
+                        num_consumers=4,
+                        file_opts=FileOptions(num_readers=2))
+    x, _ = pipe.get_batch(0)
+    pipe.resize(32)                      # scale consumers up
+    pipe.migrate_consumer(0, 3)          # move a consumer
+    x1, _ = pipe.get_batch(1)
+    need = 2 * 33
+    ref = raw[need:2 * need].reshape(2, 33)
+    np.testing.assert_array_equal(x1, ref[:, :-1])
+    pipe.resize(3)                       # scale down
+    x2, _ = pipe.get_batch(2)
+    ref2 = raw[2 * need:3 * need].reshape(2, 33)
+    np.testing.assert_array_equal(x2, ref2[:, :-1])
+    pipe.close()
+
+
+def test_pipeline_prefetch_overlap(tmp_path):
+    """get_batch(0) must have already started step 1's session (double
+    buffering — the paper's input/compute overlap)."""
+    path = str(tmp_path / "corpus3.bin")
+    make_token_file(path, 60_000, vocab_size=50, seed=7)
+    pipe = CkIOPipeline(path, global_batch=2, seq_len=64, num_pes=2,
+                        prefetch_depth=2,
+                        file_opts=FileOptions(num_readers=2))
+    pipe.get_batch(0)
+    assert 1 in pipe._bufs or 2 in pipe._bufs, "no lookahead session in flight"
+    pipe.close()

@@ -1,0 +1,96 @@
+"""Stripe/splinter layout math: unit + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.io.layout import (
+    plan_session,
+    pieces_for_range,
+    splinters_covering,
+)
+
+
+def test_basic_plan():
+    plan = plan_session(0, 1000, 4, splinter_bytes=4096, align=1)
+    assert plan.num_readers == 4
+    assert plan.stripe_bounds[0][0] == 0
+    assert plan.stripe_bounds[-1][1] == 1000
+    # stripes partition the session
+    for (s0, e0), (s1, e1) in zip(plan.stripe_bounds, plan.stripe_bounds[1:]):
+        assert e0 == s1
+
+
+def test_empty_session():
+    plan = plan_session(10, 0, 4)
+    assert plan.splinters == ()
+    assert plan.nbytes == 0
+
+
+def test_more_readers_than_bytes():
+    plan = plan_session(0, 3, 8, align=1)
+    total = sum(e - s for s, e in plan.stripe_bounds)
+    assert total == 3
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    offset=st.integers(0, 10**9),
+    nbytes=st.integers(1, 10**7),
+    readers=st.integers(1, 64),
+    splinter=st.integers(1, 20) ,
+)
+def test_stripes_partition_property(offset, nbytes, readers, splinter):
+    plan = plan_session(offset, nbytes, readers,
+                        splinter_bytes=splinter * 4096)
+    # property 1: stripes tile [offset, offset+nbytes) exactly
+    cur = offset
+    for s, e in plan.stripe_bounds:
+        assert s == cur and e >= s
+        cur = e
+    assert cur == offset + nbytes
+    # property 2: splinters tile their stripes exactly, once each
+    covered = 0
+    for sp in plan.splinters:
+        s, e = plan.stripe_bounds[sp.reader]
+        assert s <= sp.offset and sp.end <= e
+        covered += sp.nbytes
+    assert covered == nbytes
+    # property 3: reader_for agrees with stripe bounds
+    for probe in {offset, offset + nbytes - 1, offset + nbytes // 2}:
+        r = plan.reader_for(probe)
+        s, e = plan.stripe_bounds[r]
+        assert s <= probe < e
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    nbytes=st.integers(1, 10**6),
+    readers=st.integers(1, 16),
+    data=st.data(),
+)
+def test_pieces_cover_request_property(nbytes, readers, data):
+    plan = plan_session(0, nbytes, readers, splinter_bytes=64 * 1024)
+    off = data.draw(st.integers(0, nbytes - 1))
+    ln = data.draw(st.integers(1, nbytes - off))
+    pieces = pieces_for_range(plan, off, ln)
+    # pieces are contiguous, in order, cover exactly [off, off+ln)
+    cur = off
+    for r, p_off, p_len in pieces:
+        assert p_off == cur and p_len > 0
+        s, e = plan.stripe_bounds[r]
+        assert s <= p_off and p_off + p_len <= e
+        cur += p_len
+    assert cur == off + ln
+    # covering splinters include every requested byte
+    spl = splinters_covering(plan, off, ln)
+    lo = min(s.offset for s in spl)
+    hi = max(s.end for s in spl)
+    assert lo <= off and hi >= off + ln
+
+
+def test_out_of_session_read_rejected():
+    plan = plan_session(100, 50, 2)
+    with pytest.raises(ValueError):
+        pieces_for_range(plan, 90, 20)
+    with pytest.raises(ValueError):
+        pieces_for_range(plan, 140, 20)
