@@ -62,6 +62,13 @@ def perf_input_hillclimb() -> None:
     m.run()
 
 
+def perf_hotpath() -> None:
+    # Writes BENCH_hotpath.json at the repo root (before/after hot-path
+    # numbers tracked across PRs).
+    from benchmarks import perf_hotpath as m
+    m.run(quick=common.QUICK)
+
+
 ALL = [
     fig1_naive_overdecomposition,
     fig2_disk_vs_network,
@@ -72,6 +79,7 @@ ALL = [
     fig13_train_input,
     sec5_breakdown,
     perf_input_hillclimb,
+    perf_hotpath,
 ]
 
 

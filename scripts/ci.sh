@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite + hot-path benchmark smoke.
+#
+# Usage: scripts/ci.sh            (from the repo root)
+#
+# Tier-1 (must stay green; see ROADMAP.md):
+#   PYTHONPATH=src python -m pytest -x -q
+# Smoke: benchmarks/perf_hotpath.py --quick exercises the zero-copy
+# session-drain path end to end and refreshes BENCH_hotpath.json.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1 tests =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+echo "== hot-path benchmark (smoke) =="
+python benchmarks/perf_hotpath.py --quick
+
+echo "== ci OK =="

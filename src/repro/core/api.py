@@ -14,6 +14,34 @@ Every callback is *enqueued as a task* on its target PE (or routed through a
 migratable client's virtual proxy) — no operation blocks a PE. Futures-based
 sugar (``open_sync``, ``read_future``, ...) is provided for driver code and
 tests; the futures pump the scheduler, preserving split-phase semantics.
+
+Zero-copy reads (borrowed views)
+--------------------------------
+``read(..., data=None)`` / ``read_view(...)`` select the zero-copy delivery
+path: ``after_read`` receives a **read-only memoryview into the session
+arena** instead of a filled buffer (§III-C.4's zero-copy buffer→assembler
+hand-off). Lifetime contract:
+
+* the view is a *session-lifetime borrow* — it stays valid exactly until
+  ``close_read_session`` on its session, at which point the library releases
+  it and any later access raises ``ValueError`` (no silent reads of recycled
+  memory);
+* copy out (or ``jax.device_put``) anything needed past session close;
+* the view is read-only; sub-views you slice off share the same lifetime by
+  contract (slicing is not re-tracked — don't outlive the session).
+
+The delivered-byte copy count is observable: ``session.metrics.bytes_copied``
+stays 0 for view-path deliveries.
+
+Tuning knobs (``FileOptions``)
+------------------------------
+* ``num_readers`` — parallel stripe readers (autotuned when ``None``);
+* ``splinter_bytes`` — unit of physical I/O / early fulfilment (§VI-C);
+* ``work_stealing`` — straggler mitigation between reader threads;
+* ``placement`` — reader→PE mapping policy (``core/placement.py``);
+* ``piece_timing_every`` — sample rate for per-piece delivery timing
+  (0 = off, keeping instrumentation off the hot path);
+* ``network`` — optional cross-node transfer model for locality studies.
 """
 from __future__ import annotations
 
@@ -87,6 +115,11 @@ class CkIO:
         If ``client`` is given, completion is routed through its virtual proxy
         (survives migration) and the request is assembled on the client's
         *current* PE.
+
+        ``data=None`` selects the zero-copy borrowed-view path: the completion
+        message's ``.data`` is a read-only memoryview into the session arena,
+        valid until ``close_read_session`` (see module docstring for the full
+        lifetime contract).
         """
         if session.closed:
             raise RuntimeError("read() on closed session")
@@ -135,6 +168,45 @@ class CkIO:
         self.start_read_session(file, nbytes, offset, f, **kw)
         return f.wait(self.sched, timeout=timeout)
 
+    def read_view(
+        self,
+        session: Session,
+        nbytes: int,
+        offset: int,
+        after_read: Union[CkCallback, CkFuture, None],
+        client: Optional[Client] = None,
+    ) -> None:
+        """Zero-copy split-phase read: ``after_read`` gets a session-lifetime
+        read-only view (sugar for ``read(..., data=None)``)."""
+        self.read(session, nbytes, offset, None, after_read, client=client)
+
+    def read_notify(
+        self,
+        session: Session,
+        nbytes: int,
+        offset: int,
+        after_read: Union[CkCallback, CkFuture, None],
+        client: Optional[Client] = None,
+    ) -> None:
+        """Residency signal only: like ``read_view`` but the completion
+        message carries ``data=None`` and no borrow is created — for callers
+        that will take their own arena view later (e.g. once per batch
+        rather than once per consumer)."""
+        if session.closed:
+            raise RuntimeError("read_notify() on closed session")
+        if not session.contains(offset, nbytes):
+            raise ValueError(
+                f"read [{offset}, {offset+nbytes}) outside session "
+                f"[{session.offset}, {session.offset+session.nbytes})"
+            )
+        cb = _to_cb(after_read)
+        if client is not None and cb.inline is False and cb.proxy is None:
+            cb = client.callback(cb.fn)
+        pe = client.pe if client is not None else 0
+        self.director.managers[pe].assembler.submit(
+            session, offset, nbytes, None, cb, materialize_view=False
+        )
+
     def read_future(
         self,
         session: Session,
@@ -148,6 +220,29 @@ class CkIO:
         f: CkFuture = CkFuture()
         self.read(session, nbytes, offset, data, f, client=client)
         return f
+
+    def read_view_future(
+        self,
+        session: Session,
+        nbytes: int,
+        offset: int,
+        client: Optional[Client] = None,
+    ) -> CkFuture:
+        f: CkFuture = CkFuture()
+        self.read_view(session, nbytes, offset, f, client=client)
+        return f
+
+    def read_view_sync(
+        self,
+        session: Session,
+        nbytes: int,
+        offset: int,
+        client: Optional[Client] = None,
+        timeout: float = 120.0,
+    ) -> memoryview:
+        """Blocking zero-copy read; the returned view dies with the session."""
+        f = self.read_view_future(session, nbytes, offset, client)
+        return f.wait(self.sched, timeout=timeout).data
 
     def read_sync(
         self,

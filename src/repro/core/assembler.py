@@ -8,13 +8,27 @@ PE* (as a scheduled task — never inline from an I/O thread). When the last
 piece arrives it fires the user's ``after_read`` callback, which Charm++ would
 deliver as an asynchronous method invocation and we deliver as a scheduler
 task routed through the client's virtual proxy (so it survives migration).
+
+Hot-path structure (this is the per-piece cost every delivered byte pays):
+
+* pieces are **coalesced by node** (``pieces_for_range(coalesce_key=...)``):
+  contiguous stripes whose readers share a node merge into one piece — one
+  waiter, one scheduled task, one copy — since the session arena is directly
+  addressable within a node (Thakur-style request merging).
+* ``dest=None`` selects the **borrowed-view** path (paper §III-C.4's
+  zero-copy buffer→assembler hand-off): ``after_read`` receives a read-only
+  ``memoryview`` into the session arena instead of a filled buffer. The view
+  is a *session-lifetime borrow* — it is invalidated (released) by
+  ``close_read_session``; copy out anything needed beyond that.
+* per-piece wall timing runs only when ``metrics.should_time_piece()`` says
+  so (sampled/off by default), keeping instrumentation off the hot path.
 """
 from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, List, Optional
+from dataclasses import dataclass
+from typing import Any, Optional
 
 from repro.core.futures import CkCallback
 from repro.core.metrics import SessionMetrics
@@ -24,11 +38,16 @@ from repro.io.layout import pieces_for_range
 
 @dataclass
 class ReadComplete:
-    """Message delivered to ``after_read`` (paper: read completion msg)."""
+    """Message delivered to ``after_read`` (paper: read completion msg).
+
+    ``data`` is the destination buffer passed to ``read()``, or — on the
+    borrowed-view path (``dest=None``) — a read-only memoryview into the
+    session arena, valid until the session closes.
+    """
 
     offset: int
     nbytes: int
-    data: Any            # the destination buffer passed to read()
+    data: Any
     session_id: int
     latency_s: float
 
@@ -71,48 +90,76 @@ class ReadAssembler:
         dest: Any,
         after_read: CkCallback,
         metrics: Optional[SessionMetrics] = None,
+        materialize_view: bool = True,
     ) -> None:
+        """Fulfil one client request.
+
+        ``dest=None`` is the zero-copy path; with ``materialize_view=False``
+        the completion message carries ``data=None`` (residency signal only —
+        no borrow is created or tracked), for callers that will view the
+        arena themselves later."""
         readers = session.readers
         plan = session.plan
-        dest_view = _as_byteview(dest)
-        if len(dest_view) < nbytes:
-            raise ValueError(
-                f"destination buffer too small: {len(dest_view)} < {nbytes}"
-            )
+        zero_copy = dest is None
+        dest_view: Optional[memoryview] = None
+        if not zero_copy:
+            dest_view = _as_byteview(dest)
+            if len(dest_view) < nbytes:
+                raise ValueError(
+                    f"destination buffer too small: {len(dest_view)} < {nbytes}"
+                )
         metrics = metrics or session.metrics
-        pieces = pieces_for_range(plan, abs_off, nbytes)
+        pieces = pieces_for_range(
+            plan, abs_off, nbytes, coalesce_key=readers.reader_node
+        )
         state = _RequestState(len(pieces))
         net = session.opts.network
         my_node = self.sched.node_of(self.pe)
 
+        def finish() -> None:
+            lat = time.perf_counter() - state.t0
+            metrics.record_request(lat)
+            if zero_copy:
+                data = (readers.borrow_view(abs_off, nbytes)
+                        if materialize_view else None)
+            else:
+                data = dest
+            msg = ReadComplete(
+                offset=abs_off,
+                nbytes=nbytes,
+                data=data,
+                session_id=session.id,
+                latency_s=lat,
+            )
+            after_read.send(self.sched, msg)
+
         def make_piece_handler(reader: int, p_off: int, p_len: int):
             dst_lo = p_off - abs_off
+            cross = readers.reader_node(reader) != my_node
 
-            def copy_on_pe() -> None:
-                t0 = time.perf_counter()
-                src = readers.view(p_off, p_len)
-                dest_view[dst_lo : dst_lo + p_len] = src
-                cross = readers.reader_node(reader) != my_node
-                metrics.record_piece(p_len, cross, time.perf_counter() - t0)
+            def deliver_on_pe() -> None:
+                timed = metrics.should_time_piece()
+                t0 = time.perf_counter() if timed else 0.0
+                copied = 0
+                if not zero_copy:
+                    src = readers.view(p_off, p_len)
+                    dest_view[dst_lo : dst_lo + p_len] = src
+                    copied = p_len
+                metrics.record_piece(
+                    p_len,
+                    cross,
+                    (time.perf_counter() - t0) if timed else None,
+                    copied=copied,
+                )
                 if state.piece_done():
-                    lat = time.perf_counter() - state.t0
-                    metrics.record_request(lat)
-                    msg = ReadComplete(
-                        offset=abs_off,
-                        nbytes=nbytes,
-                        data=dest,
-                        session_id=session.id,
-                        latency_s=lat,
-                    )
-                    after_read.send(self.sched, msg)
+                    finish()
 
             def on_available() -> None:
                 # Runs on an I/O thread (or inline if data already resident):
-                # model the buffer→client transfer, then enqueue the copy as
-                # a task on this PE.
-                cross = readers.reader_node(reader) != my_node
+                # model the buffer→client transfer, then enqueue the delivery
+                # as a task on this PE.
                 enqueue = lambda: self.sched.enqueue(  # noqa: E731
-                    self.pe, copy_on_pe, label="ckio-piece"
+                    self.pe, deliver_on_pe, label="ckio-piece"
                 )
                 if net is not None:
                     net.deliver(p_len, not cross, enqueue)
@@ -121,7 +168,15 @@ class ReadAssembler:
 
             return on_available
 
-        for reader, p_off, p_len in pieces:
-            readers.when_available(
-                p_off, p_len, make_piece_handler(reader, p_off, p_len)
-            )
+        if not pieces:
+            # Zero-length read: still split-phase — complete via the queue.
+            self.sched.enqueue(self.pe, finish, label="ckio-piece")
+            return
+        # Batch the resident-data case: pieces already in the arena fire
+        # inline here, and the batch turns their enqueues into one
+        # lock/notify round.
+        with self.sched.batch():
+            for reader, p_off, p_len in pieces:
+                readers.when_available(
+                    p_off, p_len, make_piece_handler(reader, p_off, p_len)
+                )

@@ -28,6 +28,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.metrics import SessionMetrics
 from repro.core.scheduler import TaskScheduler
 from repro.io.layout import StripePlan, Splinter, splinters_covering
@@ -45,6 +47,13 @@ class ReaderOptions:
     delay_model: Optional[Callable[[int, Splinter], float]] = None
     # optional cross-node transfer model (None = immediate hand-off)
     network: Optional["NetworkModel"] = None
+    # per-piece delivery timing sample rate (0 = off; N = every Nth piece)
+    piece_timing_every: int = 0
+    # Zero-fill the arena up front instead of faulting pages in lazily
+    # during the first preadv. Off by default (a full memset pass of the
+    # session sat on the start critical path); useful for NUMA first-touch
+    # placement studies, and used by benchmarks to reproduce the seed path.
+    prefault_arena: bool = False
 
 
 class NetworkModel:
@@ -126,10 +135,20 @@ class BufferReaderSet:
         self.reader_pes = reader_pes[: plan.num_readers]
         self.opts = opts
         self.metrics = metrics or SessionMetrics()
+        if opts.piece_timing_every:
+            self.metrics.piece_timing_every = opts.piece_timing_every
 
         # Session storage: stripes are slices of one arena. Readers fill it;
-        # clients get zero-copy memoryviews out of it.
-        self._arena = bytearray(plan.nbytes)
+        # clients get zero-copy memoryviews out of it. np.empty skips the
+        # memset a bytearray would do — every byte is overwritten by preadv
+        # anyway, and for multi-GB sessions the zero-fill pass dominated
+        # session start (it sat on the critical path of the first request).
+        self._arena: np.ndarray = np.empty(plan.nbytes, dtype=np.uint8)
+        if opts.prefault_arena:
+            # Explicit memset: np.zeros would calloc lazily-zeroed pages
+            # without touching them — fill() actually faults every page in
+            # (first-touch) and reproduces the seed's bytearray zero-fill.
+            self._arena.fill(0)
         self._base = plan.offset
 
         self._lock = threading.Lock()
@@ -147,6 +166,9 @@ class BufferReaderSet:
         if not plan.splinters:
             self._complete_evt.set()
         self.started = False
+        # Borrowed read-only views handed to zero-copy clients; released
+        # (invalidated) when the session closes.
+        self._borrows: List[memoryview] = []
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> None:
@@ -160,6 +182,10 @@ class BufferReaderSet:
             max(1, self.plan.num_readers), max(1, self.opts.max_io_threads)
         )
         self.metrics.session_started(self.plan.nbytes, self.plan.num_readers)
+        if self.plan.nbytes:
+            # Kick kernel readahead for the whole session before the first
+            # pread lands (greedy prefetch starts now anyway).
+            self.file.advise_sequential(self.plan.offset, self.plan.nbytes)
         for t in range(nthreads):
             th = threading.Thread(
                 target=self._reader_main, args=(t, nthreads), daemon=True
@@ -235,8 +261,13 @@ class BufferReaderSet:
                 w.remaining -= 1
                 if w.remaining == 0:
                     to_fire.append(w.fire)
-        for fire in to_fire:
-            fire()
+        if not to_fire:
+            return
+        # One splinter can release many waiters; batch their enqueues into a
+        # single scheduler lock/notify round.
+        with self.sched.batch():
+            for fire in to_fire:
+                fire()
 
     # -- client-facing --------------------------------------------------------
     def when_available(
@@ -268,6 +299,36 @@ class BufferReaderSet:
         offsets in a shared address space)."""
         lo = abs_off - self._base
         return memoryview(self._arena)[lo : lo + nbytes]
+
+    def borrow_view(self, abs_off: int, nbytes: int) -> memoryview:
+        """Read-only zero-copy view handed to a client (``read(dest=None)``).
+
+        Session-lifetime borrow: the view is tracked and *released* when the
+        session closes, so use-after-close raises ``ValueError`` instead of
+        silently reading recycled memory."""
+        lo = abs_off - self._base
+        mv = memoryview(self._arena)[lo : lo + nbytes].toreadonly()
+        with self._lock:
+            self._borrows.append(mv)
+        return mv
+
+    def invalidate_borrows(self) -> int:
+        """Release every borrowed view (close_read_session). Returns count.
+
+        A view with a live buffer export (e.g. an ``np.frombuffer`` array the
+        client still holds) cannot be released — Python pins the memory for
+        the exporter, so this stays memory-safe; the borrow is dropped from
+        tracking and dies when the last exporter does."""
+        with self._lock:
+            borrows, self._borrows = self._borrows, []
+        n = 0
+        for mv in borrows:
+            try:
+                mv.release()
+                n += 1
+            except BufferError:   # live export pins the arena; safe to skip
+                pass
+        return n
 
     def reader_pe(self, r: int) -> int:
         return self.reader_pes[r]

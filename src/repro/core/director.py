@@ -140,14 +140,19 @@ class Director:
 
                 return register
 
-            for pe in range(npes):
-                self.sched.enqueue(pe, make_register(pe), label="ckio-bcast")
+            self.sched.enqueue_many(
+                ((pe, make_register(pe)) for pe in range(npes)),
+                label="ckio-bcast",
+            )
 
         self.sched.enqueue(0, do_start, label="ckio-start-session")
 
     def close_session(self, session: Session, after: CkCallback) -> None:
         def do_close() -> None:
             session.readers.cancel()
+            # Enforce the borrowed-view contract: views handed out by
+            # read(dest=None) die with the session.
+            session.readers.invalidate_borrows()
             session.closed = True
             with self._lock:
                 self.sessions.pop(session.id, None)
@@ -163,7 +168,9 @@ class Director:
 
                 return forget
 
-            for pe in range(npes):
-                self.sched.enqueue(pe, make_forget(pe), label="ckio-close-bcast")
+            self.sched.enqueue_many(
+                ((pe, make_forget(pe)) for pe in range(npes)),
+                label="ckio-close-bcast",
+            )
 
         self.sched.enqueue(0, do_close, label="ckio-close-session")

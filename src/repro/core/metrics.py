@@ -3,13 +3,21 @@
 Everything the paper's evaluation plots (throughput, overlap fraction,
 permutation cost, cross-node traffic) is derived from these counters.
 Thread-safe; negligible overhead (integer adds under a lock).
+
+Per-piece *timing* (two ``perf_counter`` calls per delivered piece) is the
+one non-negligible probe, so it sits behind ``piece_timing_every``: 0 (the
+default) disables it entirely, N samples every Nth piece — delivery
+instrumentation stays off the hot path unless a benchmark opts in.
+``bytes_copied`` counts bytes physically memcpy'd into a client destination
+buffer; the borrowed-view path leaves it untouched, which is how benchmarks
+and tests *prove* zero-copy delivery rather than assume it.
 """
 from __future__ import annotations
 
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 
 @dataclass
@@ -27,10 +35,14 @@ class SessionMetrics:
     # phase-2 (permutation/delivery) accounting
     pieces_served: int = 0
     bytes_served: int = 0
+    bytes_copied: int = 0             # memcpy'd to client buffers (0 = zero-copy)
     cross_node_bytes: int = 0
     permute_time_s: float = 0.0
+    timed_pieces: int = 0             # pieces that contributed to permute_time_s
+    piece_timing_every: int = 0       # 0 = timing off; N = time every Nth piece
     requests: int = 0
     request_latencies_s: List[float] = field(default_factory=list)
+    _piece_seq: int = 0               # sampling counter (racy by design)
 
     def session_started(self, nbytes: int, num_readers: int) -> None:
         with self.lock:
@@ -48,13 +60,30 @@ class SessionMetrics:
                 self.bytes_per_reader.get(reader, 0) + nbytes
             )
 
-    def record_piece(self, nbytes: int, cross_node: bool, dt: float) -> None:
+    def should_time_piece(self) -> bool:
+        """Cheap sampling decision — no lock; an off-by-one under contention
+        only shifts which piece gets sampled."""
+        if self.piece_timing_every <= 0:
+            return False
+        self._piece_seq += 1
+        return self._piece_seq % self.piece_timing_every == 0
+
+    def record_piece(
+        self,
+        nbytes: int,
+        cross_node: bool,
+        dt: Optional[float] = None,
+        copied: int = 0,
+    ) -> None:
         with self.lock:
             self.pieces_served += 1
             self.bytes_served += nbytes
+            self.bytes_copied += copied
             if cross_node:
                 self.cross_node_bytes += nbytes
-            self.permute_time_s += dt
+            if dt is not None:
+                self.permute_time_s += dt
+                self.timed_pieces += 1
 
     def record_request(self, latency_s: float) -> None:
         with self.lock:
@@ -91,8 +120,10 @@ class SessionMetrics:
             "steals": float(self.steals),
             "pieces_served": float(self.pieces_served),
             "bytes_served": float(self.bytes_served),
+            "bytes_copied": float(self.bytes_copied),
             "cross_node_bytes": float(self.cross_node_bytes),
             "permute_time_s": self.permute_time_s,
+            "timed_pieces": float(self.timed_pieces),
             "requests": float(self.requests),
             "imbalance": self.imbalance(),
         }

@@ -23,8 +23,9 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
+from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Any, Callable, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, Iterable, List, Optional, Tuple
 
 
 @dataclass
@@ -56,7 +57,14 @@ class TaskScheduler:
         self._cv = threading.Condition()
         self._pending = 0           # tasks enqueued but not yet executed
         self._executed = 0
-        self._rr = 0                # round-robin cursor
+        # O(1) dispatch: deque of PEs with non-empty queues (round-robin by
+        # rotation) + membership flags, instead of scanning all num_pes
+        # queues per pop — per-task dispatch cost no longer grows with the
+        # PE count (TASIO: runtime overhead per completion bounds task-based
+        # I/O at scale).
+        self._ready: Deque[int] = deque()
+        self._in_ready: List[bool] = [False] * num_pes
+        self._tl = threading.local()   # per-thread enqueue batch buffer
         self.stats: Dict[str, int] = {"enqueued": 0, "executed": 0}
 
     # -- topology -----------------------------------------------------------
@@ -68,25 +76,94 @@ class TaskScheduler:
         return (self.num_pes + self.pes_per_node - 1) // self.pes_per_node
 
     # -- enqueue (thread-safe; callable from I/O helper threads) -------------
+    def _push_locked(self, t: _Task) -> None:
+        """Append a task; caller holds ``self._cv``."""
+        self._queues[t.pe].append(t)
+        if not self._in_ready[t.pe]:
+            self._in_ready[t.pe] = True
+            self._ready.append(t.pe)
+        self._pending += 1
+        self.stats["enqueued"] += 1
+
     def enqueue(self, pe: int, fn: Callable[..., Any], *args: Any,
                 label: str = "") -> None:
         if not (0 <= pe < self.num_pes):
             raise ValueError(f"PE {pe} out of range [0,{self.num_pes})")
+        t = _Task(pe, fn, args, label)
+        buf = getattr(self._tl, "buf", None)
+        if buf is not None:          # inside batch(): defer lock + notify
+            buf.append(t)
+            return
         with self._cv:
-            self._queues[pe].append(_Task(pe, fn, args, label))
-            self._pending += 1
-            self.stats["enqueued"] += 1
-            self._cv.notify_all()
+            self._push_locked(t)
+            # Exactly one pumper consumes a given task; waking every parked
+            # thread per enqueue (notify_all) is pure overhead on the hot
+            # completion path.
+            self._cv.notify()
+
+    def enqueue_many(
+        self, tasks: Iterable[Tuple[int, Callable[..., Any]]], label: str = ""
+    ) -> int:
+        """Enqueue a batch of ``(pe, fn)`` or ``(pe, fn, args)`` tasks with a
+        single lock acquisition and a single wake-up — one completion batch
+        (e.g. a splinter landing and releasing many waiters, or a session
+        broadcast to every PE) costs one synchronization, not one per task."""
+        staged = []
+        for item in tasks:
+            pe, fn = item[0], item[1]
+            args = item[2] if len(item) > 2 else ()
+            if not (0 <= pe < self.num_pes):
+                raise ValueError(f"PE {pe} out of range [0,{self.num_pes})")
+            staged.append(_Task(pe, fn, tuple(args), label))
+        if not staged:
+            return 0
+        buf = getattr(self._tl, "buf", None)
+        if buf is not None:
+            buf.extend(staged)
+            return len(staged)
+        self._flush(staged)
+        return len(staged)
+
+    def _flush(self, staged: List[_Task]) -> None:
+        """Push a staged batch: one lock acquisition, one wake-up round."""
+        with self._cv:
+            for t in staged:
+                self._push_locked(t)
+            self._cv.notify(len(staged))
+
+    @contextmanager
+    def batch(self):
+        """Context manager deferring ``enqueue`` calls made by this thread
+        into one ``enqueue_many`` flush on exit (nesting flushes once, at the
+        outermost level). Lets completion fan-out — N waiters fired by one
+        splinter — take the scheduler lock once."""
+        if getattr(self._tl, "buf", None) is not None:
+            yield                    # already batching (nested)
+            return
+        self._tl.buf = []
+        try:
+            yield
+        finally:
+            staged, self._tl.buf = self._tl.buf, None
+            if staged:
+                self._flush(staged)
 
     # -- pump ----------------------------------------------------------------
     def _pop_next(self) -> Optional[_Task]:
         with self._cv:
-            for i in range(self.num_pes):
-                q = self._queues[(self._rr + i) % self.num_pes]
+            while self._ready:
+                pe = self._ready.popleft()
+                q = self._queues[pe]
+                if not q:            # pragma: no cover - defensive
+                    self._in_ready[pe] = False
+                    continue
+                t = q.popleft()
                 if q:
-                    self._rr = (self._rr + i + 1) % self.num_pes
-                    self._pending -= 1
-                    return q.popleft()
+                    self._ready.append(pe)   # rotate: fair round-robin
+                else:
+                    self._in_ready[pe] = False
+                self._pending -= 1
+                return t
         return None
 
     def step(self) -> bool:
@@ -98,7 +175,6 @@ class TaskScheduler:
         with self._cv:
             self._executed += 1
             self.stats["executed"] += 1
-            self._cv.notify_all()
         return True
 
     def pump(self, max_tasks: Optional[int] = None) -> int:

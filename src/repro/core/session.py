@@ -21,6 +21,8 @@ class FileOptions:
     placement: str = "node_spread"          # see core/placement.py
     network: Optional[NetworkModel] = None
     delay_model: object = None              # test hook, forwarded to readers
+    piece_timing_every: int = 0             # 0 = delivery timing off (hot path)
+    prefault_arena: bool = False            # zero-fill arena up front
 
     def reader_options(self) -> ReaderOptions:
         return ReaderOptions(
@@ -29,6 +31,8 @@ class FileOptions:
             max_io_threads=self.max_io_threads,
             delay_model=self.delay_model,  # type: ignore[arg-type]
             network=self.network,
+            piece_timing_every=self.piece_timing_every,
+            prefault_arena=self.prefault_arena,
         )
 
 

@@ -13,17 +13,27 @@ Key structural mirror of the paper:
     "read the file chunk-by-chunk (one chunk per session)").
   * consumers are migratable; `resize()` implements elastic scaling by
     re-registering consumers, leaving the reader layer untouched.
+
+Delivery modes:
+  * ``zero_copy=True`` (default): consumer reads ride the borrowed-view path
+    (``read(dest=None)``) and ``get_batch`` materializes the step's tokens as
+    a NumPy array *aliasing the session arena* — zero host copies between the
+    preadv into the arena and ``device_put``. The batch arrays are valid
+    until the **next** ``get_batch``/``close`` call (the session is retired
+    lazily); every call-site here consumes a batch before fetching the next.
+  * ``zero_copy=False``: consumer reads land directly in a per-step NumPy
+    arena (one copy, session arena → step arena), with no lifetime caveat.
 """
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import CkIO, Client, FileOptions, Session
-from repro.core.futures import CkFuture
+from repro.core.futures import CkCallback, CkFuture
 from repro.data.packing import batch_from_tokens, window_rows
 from repro.data.tokenfile import read_meta
 
@@ -31,6 +41,8 @@ from repro.data.tokenfile import read_meta
 @dataclass
 class _StepBuffer:
     step: int
+    abs_off: int = 0
+    nbytes: int = 0
     session: Optional[Session] = None
     arena: Optional[np.ndarray] = None
     outstanding: int = 0
@@ -53,6 +65,7 @@ class CkIOPipeline:
         prefetch_depth: int = 2,
         start_step: int = 0,
         drop_remainder: bool = True,
+        zero_copy: bool = True,
     ):
         self.meta = read_meta(path)
         if len(self.meta.shape) != 1:
@@ -74,7 +87,9 @@ class CkIOPipeline:
             self.ck.make_client(pe=i % self.ck.sched.num_pes)
             for i in range(self.num_consumers)
         ]
+        self.zero_copy = zero_copy
         self._bufs: Dict[int, _StepBuffer] = {}
+        self._retired: List[Session] = []   # zero-copy sessions pending close
         self._lock = threading.Lock()
         self._next_step = start_step
         for s in range(start_step, min(start_step + self.prefetch_depth, self.num_steps)):
@@ -107,8 +122,11 @@ class CkIOPipeline:
 
         start_row, num_rows = window_rows(step, self.global_batch, self.seq_len)
         abs_off, nbytes = self.meta.byte_range_for_rows(start_row, num_rows)
-        buf.arena = np.empty(num_rows, dtype=self.meta.dtype)
-        mv = memoryview(buf.arena).cast("B")
+        buf.abs_off, buf.nbytes = abs_off, nbytes
+        mv: Optional[memoryview] = None
+        if not self.zero_copy:
+            buf.arena = np.empty(num_rows, dtype=self.meta.dtype)
+            mv = memoryview(buf.arena).cast("B")
 
         def on_session(session: Session) -> None:
             buf.session = session
@@ -118,7 +136,6 @@ class CkIOPipeline:
             itemsize = self.meta.itemsize
             per -= per % itemsize  # keep element alignment
             per = max(per, itemsize)
-            outstanding = 0
             plans = []
             pos = 0
             while pos < nbytes:
@@ -138,33 +155,46 @@ class CkIOPipeline:
 
             for i, (rel_off, take) in enumerate(plans):
                 client = self.consumers[i % len(self.consumers)]
-                self.ck.read(
-                    session,
-                    take,
-                    abs_off + rel_off,
-                    mv[rel_off : rel_off + take],
-                    client.callback(make_done()),
-                    client=client,
-                )
-
-        f: CkFuture = CkFuture()
-
-        def session_ready(session: Session) -> None:
-            on_session(session)
-
-        from repro.core.futures import CkCallback
+                if mv is None:
+                    # zero-copy mode: residency signal only — get_batch
+                    # takes one whole-window arena view itself.
+                    self.ck.read_notify(
+                        session,
+                        take,
+                        abs_off + rel_off,
+                        client.callback(make_done()),
+                        client=client,
+                    )
+                else:
+                    self.ck.read(
+                        session,
+                        take,
+                        abs_off + rel_off,
+                        mv[rel_off : rel_off + take],
+                        client.callback(make_done()),
+                        client=client,
+                    )
 
         self.ck.start_read_session(
             self.file,
             nbytes,
             abs_off,
-            CkCallback(session_ready, inline=True),
+            CkCallback(on_session, inline=True),
             consumer_pes=[c.pe for c in self.consumers],
         )
 
+    def _close_retired(self) -> None:
+        with self._lock:
+            retired, self._retired = self._retired, []
+        for sess in retired:
+            self.ck.close_read_session(sess)
+
     def get_batch(self, step: int, timeout: float = 300.0) -> Tuple[np.ndarray, np.ndarray]:
         """Blocking (scheduler-pumping) fetch of step ``step``; prefetches
-        ``step + prefetch_depth`` before returning (the overlap)."""
+        ``step + prefetch_depth`` before returning (the overlap).
+
+        In zero-copy mode the returned arrays alias the step's session arena
+        and remain valid until the next ``get_batch``/``close`` call."""
         if step >= self.num_steps:
             raise IndexError(f"step {step} >= {self.num_steps}")
         self.start_step(step)  # no-op if already started
@@ -174,10 +204,20 @@ class CkIOPipeline:
         self.start_step(step + self.prefetch_depth)
         with self._lock:
             self._bufs.pop(step, None)
-        if buf.session is not None:
-            self.ck.close_read_session(buf.session)
-        tokens = buf.arena
-        assert tokens is not None
+        if self.zero_copy:
+            # Previous step's batch has been consumed by now — retire its
+            # session (which invalidates its borrowed views).
+            self._close_retired()
+            assert buf.session is not None
+            view = buf.session.readers.borrow_view(buf.abs_off, buf.nbytes)
+            tokens = np.frombuffer(view, dtype=self.meta.dtype)
+            with self._lock:
+                self._retired.append(buf.session)
+        else:
+            if buf.session is not None:
+                self.ck.close_read_session(buf.session)
+            tokens = buf.arena
+            assert tokens is not None
         if tokens.dtype == np.uint32:
             tokens = tokens.view(np.int32)   # zero-copy reinterpret
         inputs, labels = batch_from_tokens(
@@ -207,6 +247,7 @@ class CkIOPipeline:
         return jax.device_put(inputs, sharding), jax.device_put(labels, sharding)
 
     def close(self) -> None:
+        self._close_retired()
         for buf in list(self._bufs.values()):
             if buf.session is not None:
                 self.ck.close_read_session(buf.session)

@@ -15,7 +15,7 @@ stripes partition the session; every byte belongs to exactly one splinter).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import Callable, List, Optional, Tuple
 
 from repro.io.posix import DEFAULT_ALIGN
 
@@ -124,13 +124,24 @@ def plan_session(
 
 
 def pieces_for_range(
-    plan: StripePlan, abs_off: int, nbytes: int
+    plan: StripePlan,
+    abs_off: int,
+    nbytes: int,
+    coalesce_key: Optional[Callable[[int], object]] = None,
 ) -> List[Tuple[int, int, int]]:
     """Split a client read ``[abs_off, abs_off+nbytes)`` into per-reader pieces.
 
     Returns ``[(reader, piece_abs_off, piece_nbytes), ...]`` in file order.
     The paper notes that given realistic over-decomposition each request
     touches 1–2 consecutive readers; this handles the general case.
+
+    ``coalesce_key`` enables piece coalescing (Thakur-style request merging):
+    contiguous pieces whose readers map to the same key — typically the
+    reader's node, since the whole arena is addressable within a node — are
+    merged into one piece attributed to the first reader of the run. A
+    request spanning K stripes of co-located readers then costs one waiter,
+    one scheduled task and one copy (or zero copies on the borrowed-view
+    path) instead of K of each. ``None`` keeps the exact per-stripe split.
     """
     if abs_off < plan.offset or abs_off + nbytes > plan.end:
         raise ValueError(
@@ -146,7 +157,15 @@ def pieces_for_range(
         take = min(end, stripe_end) - pos
         if take <= 0:  # pragma: no cover - guarded by reader_for correctness
             raise RuntimeError("layout error: zero-length piece")
-        pieces.append((r, pos, take))
+        if (
+            coalesce_key is not None
+            and pieces
+            and coalesce_key(pieces[-1][0]) == coalesce_key(r)
+        ):
+            pr, po, pn = pieces[-1]
+            pieces[-1] = (pr, po, pn + take)   # pieces are contiguous in file order
+        else:
+            pieces.append((r, pos, take))
         pos += take
     return pieces
 

@@ -16,6 +16,12 @@ from dataclasses import dataclass, field
 # possible to avoid read-modify-write amplification on the storage side.
 DEFAULT_ALIGN = 4096
 
+# os.preadv reads straight into a caller-provided buffer (no intermediate
+# bytes object); available on Linux/BSD since Python 3.7. When absent we fall
+# back to the allocate-then-copy pread path (also used by benchmarks to
+# measure the cost of that extra copy).
+HAVE_PREADV = hasattr(os, "preadv")
+
 
 @dataclass
 class PosixFile:
@@ -29,6 +35,9 @@ class PosixFile:
     path: str
     fd: int = -1
     size: int = 0
+    # When False (or when the platform lacks os.preadv) pread_into uses the
+    # allocate-then-copy fallback; benchmarks flip this to quantify the copy.
+    use_preadv: bool = True
     _refcount: int = 0
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
@@ -51,11 +60,45 @@ class PosixFile:
         return os.pread(self.fd, nbytes, offset)
 
     def pread_into(self, offset: int, view: memoryview) -> int:
-        """Positional read into a caller-provided buffer (one copy total)."""
-        data = os.pread(self.fd, len(view), offset)
-        n = len(data)
-        view[:n] = data
-        return n
+        """Positional read into a caller-provided buffer — zero intermediate
+        copies on the preadv path.
+
+        Loops on short reads (the kernel may return fewer bytes than asked,
+        e.g. across page-cache/readahead boundaries) and stops at EOF, so the
+        return value is only < len(view) when the file genuinely ends inside
+        the range. Safe from any thread; releases the GIL per syscall.
+        """
+        want = len(view)
+        total = 0
+        if self.use_preadv and HAVE_PREADV:
+            while total < want:
+                got = os.preadv(self.fd, [view[total:]], offset + total)
+                if got <= 0:          # EOF (0); preadv never returns <0 in py
+                    break
+                total += got
+            return total
+        # Fallback: os.pread allocates a bytes object we must copy out of.
+        while total < want:
+            data = os.pread(self.fd, want - total, offset + total)
+            if not data:              # EOF
+                break
+            view[total : total + len(data)] = data
+            total += len(data)
+        return total
+
+    def advise_sequential(self, offset: int, nbytes: int) -> bool:
+        """Hint the kernel that ``[offset, offset+nbytes)`` will be read
+        sequentially and soon (``POSIX_FADV_SEQUENTIAL`` doubles readahead,
+        ``WILLNEED`` starts it). Called once per reader stripe on session
+        start; best-effort — returns False where unsupported."""
+        try:
+            os.posix_fadvise(
+                self.fd, offset, nbytes, os.POSIX_FADV_SEQUENTIAL
+            )
+            os.posix_fadvise(self.fd, offset, nbytes, os.POSIX_FADV_WILLNEED)
+            return True
+        except (AttributeError, OSError):
+            return False
 
     def close(self) -> None:
         with self._lock:

@@ -225,6 +225,8 @@ def decode_state_specs(abstract_state: Any, mesh, cfg=None) -> Any:
 
 def logits_spec(mesh, batch_size: int = 0, vocab: int = 0) -> P:
     b = _batch_axes(mesh)
+    if len(b) == 1:
+        b = b[0]                       # canonical bare-axis form ("data",) -> "data"
     if batch_size and batch_size % _batch_size(mesh) != 0:
         b = None                       # e.g. long_500k batch=1
     m = mesh_axis_sizes(mesh).get("model", 1)

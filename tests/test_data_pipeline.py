@@ -1,7 +1,7 @@
 """Token file format, packing, and the CkIO training pipeline."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import FileOptions
 from repro.data import (

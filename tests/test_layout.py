@@ -1,7 +1,7 @@
 """Stripe/splinter layout math: unit + hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.io.layout import (
     plan_session,

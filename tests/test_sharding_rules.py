@@ -11,8 +11,17 @@ from repro.launch import sharding as shd
 from repro.models import build_model
 from repro.train.optimizer import init_opt_state
 
-POD = AbstractMesh((16, 16), ("data", "model"))
-MULTIPOD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(shape, names):
+    """AbstractMesh across jax versions: newer jax takes one
+    ``((name, size), ...)`` tuple, older jax took ``(shape, names)``."""
+    try:
+        return AbstractMesh(tuple(zip(names, shape)))
+    except TypeError:
+        return AbstractMesh(shape, names)
+
+
+POD = _abstract_mesh((16, 16), ("data", "model"))
+MULTIPOD = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _axis_sizes(mesh):
