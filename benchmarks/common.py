@@ -84,3 +84,22 @@ def emit(name: str, us_per_call: float, derived: str, **kw) -> None:
 
 def rows() -> List[Dict]:
     return _ROWS
+
+
+def write_report(name: str, report: Dict, quick: bool) -> str:
+    """Persist a tracked benchmark artifact.
+
+    Full runs write the committed repo-root ``BENCH_<name>.json``; quick
+    (CI smoke) runs must not clobber it and land in the scratch dir as
+    ``BENCH_<name>.quick.json`` instead. Returns the path written."""
+    import json
+
+    repo_root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    out = (os.path.join(BENCH_DIR, f"BENCH_{name}.quick.json") if quick
+           else os.path.join(repo_root, f"BENCH_{name}.json"))
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {out}")
+    return out

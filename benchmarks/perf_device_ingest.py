@@ -1,0 +1,189 @@
+"""Step-ingest microbenchmark: host-path batch construction + device_put
+versus the device-ingest path (one device_put of the whole window + on-device
+reassembly), before/after the PR-2 rework.
+
+"Before" is the PR-1 hot path: ``get_batch`` hands out arena-aliasing views,
+then ``to_device`` issues **two** host→device transfers of *strided* arrays
+(inputs + labels) — the host marshals the window on the way to the device
+(the paper's phase-2 permutation cost, still on the host).
+
+"After" is ``get_batch_device``: the borrowed whole-window arena view is
+``device_put`` **once** (contiguous), and batch-major order + the label
+shift happen on device (``kernels/reassemble.py``). The ``IngestMetrics``
+counters *prove* the host permutation is gone: ``host_permute_bytes == 0``
+and exactly one transfer per step.
+
+A correctness cross-check runs the Pallas kernels in interpret mode against
+the host batches (the timed path uses the backend-default gather: Pallas on
+TPU, XLA elsewhere — interpret-mode grid execution is a debugging device,
+not a benchmark subject).
+
+Writes ``BENCH_device_ingest.json`` at the repo root.
+
+Usage: python benchmarks/perf_device_ingest.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import FileOptions
+from repro.data import CkIOPipeline, make_token_file
+
+NUM_PES = 4
+NUM_READERS = 4
+
+
+def ensure_corpus(steps: int, global_batch: int, seq_len: int) -> str:
+    tokens = steps * global_batch * (seq_len + 1) + 64
+    path = os.path.join(common.BENCH_DIR,
+                        f"ingest_{steps}x{global_batch}x{seq_len}.bin")
+    if not os.path.exists(path):
+        make_token_file(path, tokens, vocab_size=32000, seed=5)
+    return path
+
+
+def make_pipe(path: str, global_batch: int, seq_len: int) -> CkIOPipeline:
+    return CkIOPipeline(
+        path, global_batch, seq_len, num_pes=NUM_PES, num_consumers=16,
+        file_opts=FileOptions(num_readers=NUM_READERS),
+    )
+
+
+def bench_host_path(path: str, steps: int, global_batch: int, seq_len: int):
+    import jax
+
+    pipe = make_pipe(path, global_batch, seq_len)
+    # warm (compile/device init)
+    x, y = pipe.get_batch(0)
+    xd, yd = pipe.to_device(x, y)
+    jax.block_until_ready((xd, yd))
+    t0 = time.perf_counter()
+    for s in range(1, steps):
+        x, y = pipe.get_batch(s)
+        xd, yd = pipe.to_device(x, y)
+    jax.block_until_ready((xd, yd))
+    wall = time.perf_counter() - t0
+    ingest = pipe.ingest.summary()
+    pipe.close()
+    return wall / (steps - 1), ingest, (np.asarray(xd), np.asarray(yd))
+
+
+def bench_device_path(path: str, steps: int, global_batch: int, seq_len: int):
+    import jax
+
+    pipe = make_pipe(path, global_batch, seq_len)
+    xd, yd = pipe.get_batch_device(0)                  # warm
+    jax.block_until_ready((xd, yd))
+    t0 = time.perf_counter()
+    for s in range(1, steps):
+        xd, yd = pipe.get_batch_device(s)
+    jax.block_until_ready((xd, yd))
+    wall = time.perf_counter() - t0
+    ingest = pipe.ingest.summary()
+    pipe.close()
+    return wall / (steps - 1), ingest, (np.asarray(xd), np.asarray(yd))
+
+
+def check_interpret_kernels(path: str, global_batch: int, seq_len: int):
+    """Pallas interpret-mode gather must reproduce the host batch exactly."""
+    pipe_h = make_pipe(path, global_batch, seq_len)
+    pipe_d = make_pipe(path, global_batch, seq_len)
+    ok = True
+    for s in range(2):
+        xh, yh = pipe_h.get_batch(s)
+        xd, yd = pipe_d.get_batch_device(s, use_pallas=True)
+        ok &= bool(np.array_equal(xh, np.asarray(xd))
+                   and np.array_equal(yh, np.asarray(yd)))
+    pipe_h.close()
+    pipe_d.close()
+    return ok
+
+
+def run(quick: bool = False) -> dict:
+    if quick:
+        steps, global_batch, seq_len = 12, 16, 256
+    else:
+        steps, global_batch, seq_len = 32, 32, 1024
+    path = ensure_corpus(steps, global_batch, seq_len)
+
+    host_s, host_ingest, (xh, yh) = bench_host_path(
+        path, steps, global_batch, seq_len)
+    dev_s, dev_ingest, (xd, yd) = bench_device_path(
+        path, steps, global_batch, seq_len)
+    match = bool(np.array_equal(xh, xd) and np.array_equal(yh, yd))
+    interpret_ok = check_interpret_kernels(path, global_batch, seq_len)
+
+    window_bytes = global_batch * (seq_len + 1) * 4
+    report = {
+        "bench": "perf_device_ingest",
+        "steps": steps,
+        "global_batch": global_batch,
+        "seq_len": seq_len,
+        "window_bytes": window_bytes,
+        "before_host_path": {
+            "s_per_step": round(host_s, 6),
+            "host_permute_bytes_per_step": int(
+                host_ingest["host_permute_bytes"] // host_ingest["steps"]),
+            # Nominal, not measured: to_device() issues one device_put per
+            # array (inputs + labels, both strided) and IngestMetrics does
+            # not instrument the host-path transfers.
+            "h2d_transfers_per_step_nominal": 2,
+        },
+        "after_device_ingest": {
+            "s_per_step": round(dev_s, 6),
+            "host_permute_bytes_per_step": int(
+                dev_ingest["host_permute_bytes"] // dev_ingest["steps"]),
+            "h2d_transfers_per_step": int(
+                dev_ingest["h2d_transfers"] // dev_ingest["steps"]),
+        },
+        "speedup": round(host_s / dev_s, 2) if dev_s else 0.0,
+        "batches_match": match,
+        "pallas_interpret_matches": interpret_ok,
+        "host_permutation_eliminated": dev_ingest["host_permute_bytes"] == 0,
+        "note": "tracked contract: host_permute_bytes == 0 and one "
+                "contiguous h2d transfer/step (vs two strided). Wall time "
+                "is NOT the contract on this CPU backend: device==host, so "
+                "the moved permutation costs similar cycles plus extra XLA "
+                "dispatch, and s_per_step may come out slower here. The "
+                "wall-time win is architectural (accelerators): half the "
+                "interconnect transfers, permutation at HBM bandwidth.",
+    }
+    common.emit("device_ingest_before", host_s * 1e6,
+                f"{window_bytes / host_s / 1e6:.0f}MBps")
+    common.emit("device_ingest_after", dev_s * 1e6,
+                f"{window_bytes / dev_s / 1e6:.0f}MBps")
+    common.emit("device_ingest_host_bytes", 0.0,
+                str(int(dev_ingest["host_permute_bytes"])))
+    common.emit("device_ingest_speedup", 0.0, f"{report['speedup']:.2f}x")
+    common.write_report("device_ingest", report, quick)
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small window / fewer steps (CI smoke)")
+    args = ap.parse_args()
+    report = run(quick=args.quick)
+    ok = (report["host_permutation_eliminated"]
+          and report["batches_match"]
+          and report["pallas_interpret_matches"]
+          and report["after_device_ingest"]["h2d_transfers_per_step"] == 1)
+    print(f"# speedup={report['speedup']}x host_permute_bytes="
+          f"{report['after_device_ingest']['host_permute_bytes_per_step']} "
+          f"{'OK' if ok else 'FAIL'}")
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

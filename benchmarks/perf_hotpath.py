@@ -22,7 +22,6 @@ Usage: python benchmarks/perf_hotpath.py [--quick] [--mb N]
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -33,9 +32,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks import common
 from repro.core import CkIO, FileOptions
 from repro.core.scheduler import TaskScheduler
-
-REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-OUT_PATH = os.path.join(REPO_ROOT, "BENCH_hotpath.json")
 
 NUM_PES = 8
 NUM_READERS = 4
@@ -157,10 +153,7 @@ def run(quick: bool = False, mb: int = 0) -> dict:
                 str(after["bytes_copied"]))
     common.emit("hotpath_dispatch", dispatch["us_per_task"],
                 f"batched={dispatch['us_per_task_batched']}us")
-    with open(OUT_PATH, "w") as f:
-        json.dump(report, f, indent=2)
-        f.write("\n")
-    print(f"# wrote {OUT_PATH}")
+    common.write_report("hotpath", report, quick)
     return report
 
 

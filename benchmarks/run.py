@@ -69,6 +69,13 @@ def perf_hotpath() -> None:
     m.run(quick=common.QUICK)
 
 
+def perf_device_ingest() -> None:
+    # Writes BENCH_device_ingest.json at the repo root (host-path vs
+    # device-ingest per-step numbers + host-permutation-bytes proof).
+    from benchmarks import perf_device_ingest as m
+    m.run(quick=common.QUICK)
+
+
 ALL = [
     fig1_naive_overdecomposition,
     fig2_disk_vs_network,
@@ -80,6 +87,7 @@ ALL = [
     sec5_breakdown,
     perf_input_hillclimb,
     perf_hotpath,
+    perf_device_ingest,
 ]
 
 

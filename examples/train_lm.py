@@ -23,6 +23,7 @@ if __name__ == "__main__":
         "--num-readers", "4",
         "--num-consumers", "32",
         "--ckpt-every", "50",
+        "--device-ingest",   # one device_put/step + on-device reassembly
     ] + args
     from repro.launch.train import main
 

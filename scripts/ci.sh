@@ -1,12 +1,21 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 test suite + hot-path benchmark smoke.
+# CI entry point: tier-1 test suite + benchmark smokes + coverage floor.
 #
 # Usage: scripts/ci.sh            (from the repo root)
 #
 # Tier-1 (must stay green; see ROADMAP.md):
 #   PYTHONPATH=src python -m pytest -x -q
-# Smoke: benchmarks/perf_hotpath.py --quick exercises the zero-copy
-# session-drain path end to end and refreshes BENCH_hotpath.json.
+# Smokes (quick mode writes scratch-dir BENCH_*.quick.json files; the
+# committed repo-root BENCH_*.json artifacts are full-mode only and are
+# NOT touched by CI — regenerate them by running the benchmarks without
+# --quick):
+#   benchmarks/perf_hotpath.py --quick       zero-copy session drain
+#   benchmarks/perf_device_ingest.py --quick device-ingest path (incl. the
+#                                            Pallas interpret-mode kernel
+#                                            check)
+# Coverage floor: line coverage of src/repro/core + src/repro/data over the
+# core/data-focused tests must stay >= the floor in scripts/coverage_floor.py
+# (stdlib settrace fallback — no third-party deps required).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,5 +24,11 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
 echo "== hot-path benchmark (smoke) =="
 python benchmarks/perf_hotpath.py --quick
+
+echo "== device-ingest benchmark (smoke, interpret check) =="
+python benchmarks/perf_device_ingest.py --quick
+
+echo "== coverage floor (core + data) =="
+python scripts/coverage_floor.py
 
 echo "== ci OK =="

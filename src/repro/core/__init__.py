@@ -8,6 +8,7 @@ from repro.core.buffers import BufferReaderSet, NetworkModel, ReaderOptions
 from repro.core.futures import CkCallback, CkFuture
 from repro.core.migration import Client, LocationManager, VirtualProxy
 from repro.core.scheduler import BackgroundWorker, TaskScheduler
+from repro.core.metrics import IngestMetrics, SessionMetrics
 from repro.core.session import FileHandle, FileOptions, Session
 from repro.core.assembler import ReadComplete
 
@@ -27,6 +28,8 @@ __all__ = [
     "TaskScheduler",
     "FileHandle",
     "FileOptions",
+    "IngestMetrics",
     "Session",
+    "SessionMetrics",
     "ReadComplete",
 ]

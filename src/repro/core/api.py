@@ -256,6 +256,13 @@ class CkIO:
         f = self.read_future(session, nbytes, offset, data, client)
         return f.wait(self.sched, timeout=timeout).data
 
+    def session_arrival_order(self, session: Session):
+        """Per-session piece (splinter) arrival order — the completion order
+        the reader layer observed. Feeds the device-ingest index-map
+        construction (``data.packing.pieces_in_arrival_order``); a snapshot,
+        stable once the session's reads are complete."""
+        return session.arrival_order
+
     def close_read_session_sync(self, session: Session, timeout: float = 60.0) -> None:
         f: CkFuture = CkFuture()
         self.close_read_session(session, f)

@@ -154,6 +154,10 @@ class BufferReaderSet:
         self._lock = threading.Lock()
         self._done = [False] * len(plan.splinters)
         self._ndone = 0
+        # Global splinter ids in completion order — the staging order a
+        # streamed (per-splinter) host→device path would see; consumed by
+        # the device-ingest index-map construction (data/packing.py).
+        self._arrival: List[int] = []
         self._waiters_by_splinter: Dict[int, List[_Waiter]] = {}
         # per-reader deque of unread splinters (lists popped from index 0 /
         # stolen from the end)
@@ -196,6 +200,21 @@ class BufferReaderSet:
     def cancel(self) -> None:
         self._cancelled = True
 
+    def stop(self, timeout: float = 10.0) -> bool:
+        """Cancel and join the reader threads (file-close barrier).
+
+        Returns True when every thread exited — only then is it safe to
+        close the underlying file. False means a straggler survived the
+        per-thread join timeout (e.g. a pread stalled on a dying FS) and
+        may still touch the fd; the caller must not close it."""
+        self._cancelled = True
+        ok = True
+        for th in self._threads:
+            if th.is_alive():
+                th.join(timeout)
+                ok &= not th.is_alive()
+        return ok
+
     def join(self, timeout: float = 120.0) -> bool:
         """Wait for all splinters to be resident (bench/driver use only —
         application code uses `when_available`/callbacks instead)."""
@@ -208,6 +227,16 @@ class BufferReaderSet:
     def progress(self) -> Tuple[int, int]:
         with self._lock:
             return self._ndone, len(self._done)
+
+    def arrival_order(self) -> Tuple[int, ...]:
+        """Global splinter ids in the order their reads completed (snapshot).
+
+        A permutation of ``range(len(plan.splinters))`` once the session is
+        complete; work stealing and stragglers make it differ from file
+        order, which is exactly what the device-side reassembly index maps
+        (``data/packing.py``) consume."""
+        with self._lock:
+            return tuple(self._arrival)
 
     # -- reader threads -------------------------------------------------------
     def _next_splinter(self, tid: int, nthreads: int) -> Optional[Splinter]:
@@ -255,6 +284,7 @@ class BufferReaderSet:
         with self._lock:
             self._done[sp.index] = True
             self._ndone += 1
+            self._arrival.append(sp.index)
             if self._ndone == len(self._done):
                 self._complete_evt.set()
             for w in self._waiters_by_splinter.pop(sp.index, ()):  # type: ignore[arg-type]

@@ -49,8 +49,9 @@ class CkCallback:
             self.fn(*args)
             return
         if self.proxy is not None:
-            # Late-bound: route to wherever the chare lives *now*.
-            pe = self.proxy.current_pe()
+            # Late-bound: route to wherever the chare lives *now* (home-PE
+            # fallback if it was deregistered by an elastic shrink mid-read).
+            pe = self.proxy.delivery_pe()
             sched.enqueue(pe, self.fn, *args, label="cb@proxy")
         else:
             sched.enqueue(self.pe, self.fn, *args, label="cb@pe")

@@ -127,3 +127,55 @@ class SessionMetrics:
             "requests": float(self.requests),
             "imbalance": self.imbalance(),
         }
+
+
+@dataclass
+class IngestMetrics:
+    """Per-pipeline step-ingest accounting (host vs device reassembly).
+
+    ``host_permute_bytes`` counts bytes the *host* handles past the session
+    arena to build a training batch — the paper's phase-2 permutation cost.
+    The host path pays the window once per step; the device path
+    (``get_batch_device``) must keep it at **0**: its only per-step host
+    work is one ``device_put`` of the borrowed arena view, accounted
+    separately as ``h2d_transfers`` / ``h2d_bytes``. Benchmarks assert on
+    these counters rather than assuming the permutation moved.
+    """
+
+    lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    steps: int = 0
+    host_steps: int = 0
+    device_steps: int = 0
+    host_permute_bytes: int = 0
+    h2d_transfers: int = 0
+    h2d_bytes: int = 0
+
+    def record_host_step(self, permute_bytes: int) -> None:
+        with self.lock:
+            self.steps += 1
+            self.host_steps += 1
+            self.host_permute_bytes += permute_bytes
+
+    def record_device_step(
+        self, staged_bytes: int, transfers: int = 1, host_bytes: int = 0
+    ) -> None:
+        """``host_bytes`` covers host-side copies the staging still pays
+        (e.g. the copy-mode session→step-arena copy); the zero-copy device
+        path passes 0."""
+        with self.lock:
+            self.steps += 1
+            self.device_steps += 1
+            self.h2d_transfers += transfers
+            self.h2d_bytes += staged_bytes
+            self.host_permute_bytes += host_bytes
+
+    def summary(self) -> Dict[str, float]:
+        with self.lock:
+            return {
+                "steps": float(self.steps),
+                "host_steps": float(self.host_steps),
+                "device_steps": float(self.device_steps),
+                "host_permute_bytes": float(self.host_permute_bytes),
+                "h2d_transfers": float(self.h2d_transfers),
+                "h2d_bytes": float(self.h2d_bytes),
+            }

@@ -29,6 +29,7 @@ class LocationManager:
         self._where: Dict[int, int] = {}
         self._next_vid = 0
         self.migrations = 0
+        self.stale_deliveries = 0
 
     def register(self, pe: int, vid: Optional[int] = None) -> int:
         with self._lock:
@@ -50,9 +51,34 @@ class LocationManager:
             self._where[vid] = new_pe
             self.migrations += 1
 
+    def deregister(self, vid: int) -> None:
+        """Retire a virtual id (consumer destruction / elastic shrink).
+
+        Later ``lookup``/``migrate`` on the id raise ``KeyError`` — a retired
+        consumer must not silently resolve to a stale PE. Idempotent."""
+        with self._lock:
+            self._where.pop(vid, None)
+
+    def count(self) -> int:
+        """Currently registered virtual ids (leak detector for tests)."""
+        with self._lock:
+            return len(self._where)
+
     def lookup(self, vid: int) -> int:
         with self._lock:
             return self._where[vid]
+
+    def lookup_or_home(self, vid: int) -> int:
+        """PE for delivery: current location, or the home PE (0) when the id
+        has been deregistered — completions racing an elastic shrink must
+        still land somewhere (Charm++: messages to a destroyed chare are
+        delivered via its home location manager). Counted for observability."""
+        with self._lock:
+            pe = self._where.get(vid)
+            if pe is None:
+                self.stale_deliveries += 1
+                return 0
+            return pe
 
     def proxy(self, vid: int) -> "VirtualProxy":
         return VirtualProxy(self, vid)
@@ -69,6 +95,10 @@ class VirtualProxy:
 
     def current_pe(self) -> int:
         return self.loc.lookup(self.vid)
+
+    def delivery_pe(self) -> int:
+        """Current PE, falling back to the home PE for deregistered ids."""
+        return self.loc.lookup_or_home(self.vid)
 
     def current_node(self) -> int:
         return self.loc.sched.node_of(self.current_pe())
@@ -96,6 +126,10 @@ class Client:
 
     def migrate(self, new_pe: int) -> None:
         self.loc.migrate(self.vid, new_pe)
+
+    def deregister(self) -> None:
+        """Drop this client from the location table (idempotent)."""
+        self.loc.deregister(self.vid)
 
     def callback(self, fn: Callable) -> "CkCallback":
         from repro.core.futures import CkCallback

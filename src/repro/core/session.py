@@ -77,3 +77,8 @@ class Session:
 
     def contains(self, abs_off: int, nbytes: int) -> bool:
         return abs_off >= self.plan.offset and abs_off + nbytes <= self.plan.end
+
+    @property
+    def arrival_order(self):
+        """Splinter completion order (see BufferReaderSet.arrival_order)."""
+        return self.readers.arrival_order()

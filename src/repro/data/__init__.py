@@ -5,7 +5,15 @@ from repro.data.tokenfile import (
     read_meta,
     decode_rows,
 )
-from repro.data.packing import batch_from_tokens, pack_documents, window_rows
+from repro.data.packing import (
+    as_block_permutation,
+    batch_from_tokens,
+    pack_documents,
+    pieces_in_arrival_order,
+    row_gather_index,
+    token_gather_from_pieces,
+    window_rows,
+)
 from repro.data.pipeline import CkIOPipeline
 from repro.data.synthetic import (
     make_embedding_file,
@@ -18,8 +26,12 @@ __all__ = [
     "write_token_file",
     "read_meta",
     "decode_rows",
+    "as_block_permutation",
     "batch_from_tokens",
     "pack_documents",
+    "pieces_in_arrival_order",
+    "row_gather_index",
+    "token_gather_from_pieces",
     "window_rows",
     "CkIOPipeline",
     "make_embedding_file",

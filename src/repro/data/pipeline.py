@@ -12,17 +12,43 @@ Key structural mirror of the paper:
   * one read session per step window, prefetched greedily (paper §III-A:
     "read the file chunk-by-chunk (one chunk per session)").
   * consumers are migratable; `resize()` implements elastic scaling by
-    re-registering consumers, leaving the reader layer untouched.
+    re-registering consumers, leaving the reader layer untouched; shrunk
+    consumers are deregistered from the location manager (no leaked ids).
 
 Delivery modes:
   * ``zero_copy=True`` (default): consumer reads ride the borrowed-view path
     (``read(dest=None)``) and ``get_batch`` materializes the step's tokens as
     a NumPy array *aliasing the session arena* — zero host copies between the
-    preadv into the arena and ``device_put``. The batch arrays are valid
-    until the **next** ``get_batch``/``close`` call (the session is retired
-    lazily); every call-site here consumes a batch before fetching the next.
+    preadv into the arena and ``device_put``.
   * ``zero_copy=False``: consumer reads land directly in a per-step NumPy
     arena (one copy, session arena → step arena), with no lifetime caveat.
+
+Device ingest (``get_batch_device``) and its lifetime contract
+--------------------------------------------------------------
+``get_batch_device(step)`` replaces the host tail of the pipeline: the
+borrowed **whole-window arena view** is handed to ``jax.device_put`` exactly
+once (the step's only host→device transfer), and batch-major ``(inputs,
+labels)`` — including the label shift-by-one and remainder-window padding —
+are produced **on device** by the ``kernels/reassemble.py`` gather kernels
+(the paper's phase-2 data permutation, moved to where bandwidth is
+cheapest). Per step, host code touches file *metadata* only; the
+``ingest`` counters (``core.metrics.IngestMetrics``) prove it:
+``host_permute_bytes`` stays 0 and ``h2d_transfers`` advances by exactly 1.
+(With ``zero_copy=False`` the session→step-arena copy still happens and is
+counted as host bytes — only the zero-copy default earns the 0.)
+
+Lifetime rules:
+  * the returned ``(inputs, labels)`` are ordinary JAX device arrays — they
+    own their storage and stay valid as long as the caller holds them;
+  * the *staged host view* (the borrowed arena view fed to ``device_put``)
+    and its session stay alive until the **next** ``get_batch*``/``close``
+    call. At that point the pipeline blocks on the staged transfer, drops
+    its host references and retires the session — any access to the old
+    borrowed view afterwards raises ``ValueError`` (never a silent read of
+    recycled arena memory);
+  * host-path ``get_batch`` keeps its PR-1 contract: the returned arrays
+    alias the session arena and are valid until the next
+    ``get_batch*``/``close`` call.
 """
 from __future__ import annotations
 
@@ -34,6 +60,7 @@ import numpy as np
 
 from repro.core import CkIO, Client, FileOptions, Session
 from repro.core.futures import CkCallback, CkFuture
+from repro.core.metrics import IngestMetrics
 from repro.data.packing import batch_from_tokens, window_rows
 from repro.data.tokenfile import read_meta
 
@@ -43,10 +70,21 @@ class _StepBuffer:
     step: int
     abs_off: int = 0
     nbytes: int = 0
+    num_rows: int = 0                  # actual rows (< full for remainder)
     session: Optional[Session] = None
     arena: Optional[np.ndarray] = None
     outstanding: int = 0
     ready: CkFuture = field(default_factory=CkFuture)
+
+
+@dataclass
+class _StagedStep:
+    """Host-side references pinning one device-ingested step (see module
+    docstring lifetime rules): released by the next ``get_batch*``."""
+
+    staged: object                     # jax.Array (whole-window tokens)
+    host_tokens: Optional[np.ndarray]  # np view aliasing the arena
+    host_view: Optional[memoryview]    # the borrowed arena view
 
 
 class CkIOPipeline:
@@ -66,6 +104,7 @@ class CkIOPipeline:
         start_step: int = 0,
         drop_remainder: bool = True,
         zero_copy: bool = True,
+        pad_id: int = 0,
     ):
         self.meta = read_meta(path)
         if len(self.meta.shape) != 1:
@@ -76,6 +115,8 @@ class CkIOPipeline:
         self.file_opts = file_opts or FileOptions()
         self.file = self.ck.open_sync(path, self.file_opts)
         self.prefetch_depth = max(1, prefetch_depth)
+        self.drop_remainder = drop_remainder
+        self.pad_id = pad_id
         rows_per_step = global_batch * (seq_len + 1)
         self.num_steps = self.meta.num_rows // rows_per_step
         if not drop_remainder and self.meta.num_rows % rows_per_step:
@@ -88,8 +129,10 @@ class CkIOPipeline:
             for i in range(self.num_consumers)
         ]
         self.zero_copy = zero_copy
+        self.ingest = IngestMetrics()
         self._bufs: Dict[int, _StepBuffer] = {}
         self._retired: List[Session] = []   # zero-copy sessions pending close
+        self._staged: List[_StagedStep] = []  # device steps pending release
         self._lock = threading.Lock()
         self._next_step = start_step
         for s in range(start_step, min(start_step + self.prefetch_depth, self.num_steps)):
@@ -105,6 +148,11 @@ class CkIOPipeline:
                 for i in range(cur, num_consumers)
             )
         else:
+            # Deregister before dropping: a shrunk consumer must not stay in
+            # the migration manager's table (shrink→grow cycles would leak
+            # one registered id per dropped consumer).
+            for c in self.consumers[num_consumers:]:
+                c.deregister()
             del self.consumers[num_consumers:]
         self.num_consumers = num_consumers
 
@@ -121,8 +169,10 @@ class CkIOPipeline:
             self._bufs[step] = buf
 
         start_row, num_rows = window_rows(step, self.global_batch, self.seq_len)
+        # Remainder final window (drop_remainder=False): clamp to the file.
+        num_rows = min(num_rows, self.meta.num_rows - start_row)
         abs_off, nbytes = self.meta.byte_range_for_rows(start_row, num_rows)
-        buf.abs_off, buf.nbytes = abs_off, nbytes
+        buf.abs_off, buf.nbytes, buf.num_rows = abs_off, nbytes, num_rows
         mv: Optional[memoryview] = None
         if not self.zero_copy:
             buf.arena = np.empty(num_rows, dtype=self.meta.dtype)
@@ -186,15 +236,29 @@ class CkIOPipeline:
     def _close_retired(self) -> None:
         with self._lock:
             retired, self._retired = self._retired, []
+            staged, self._staged = self._staged, []
+        for st in staged:
+            # The step's one host→device transfer may still be in flight;
+            # the arena (and our host refs) must outlive it. Block, then
+            # drop the references so the borrow can actually be released.
+            # A failed transfer propagates (the device array is unusable
+            # and silence would let ingest counters claim success); the
+            # host refs are dropped either way — a failed transfer does
+            # not need the arena.
+            try:
+                st.staged.block_until_ready()
+            finally:
+                st.host_tokens = None
+                st.staged = None
         for sess in retired:
+            # Invalidate borrows inline (idempotent — close_session repeats
+            # it) so the lifetime contract is "valid until the next
+            # get_batch*", not "until some later scheduler pump"; the
+            # split-phase session close itself stays off the critical path.
+            sess.readers.invalidate_borrows()
             self.ck.close_read_session(sess)
 
-    def get_batch(self, step: int, timeout: float = 300.0) -> Tuple[np.ndarray, np.ndarray]:
-        """Blocking (scheduler-pumping) fetch of step ``step``; prefetches
-        ``step + prefetch_depth`` before returning (the overlap).
-
-        In zero-copy mode the returned arrays alias the step's session arena
-        and remain valid until the next ``get_batch``/``close`` call."""
+    def _wait_step(self, step: int, timeout: float) -> _StepBuffer:
         if step >= self.num_steps:
             raise IndexError(f"step {step} >= {self.num_steps}")
         self.start_step(step)  # no-op if already started
@@ -204,6 +268,12 @@ class CkIOPipeline:
         self.start_step(step + self.prefetch_depth)
         with self._lock:
             self._bufs.pop(step, None)
+        return buf
+
+    def _window_tokens(self, buf: _StepBuffer):
+        """Whole-window tokens (and the borrowed arena view backing them,
+        zero-copy mode only). Retires the *previous* step first."""
+        view: Optional[memoryview] = None
         if self.zero_copy:
             # Previous step's batch has been consumed by now — retire its
             # session (which invalidates its borrowed views).
@@ -214,15 +284,81 @@ class CkIOPipeline:
             with self._lock:
                 self._retired.append(buf.session)
         else:
+            self._close_retired()     # release any pending device-step refs
             if buf.session is not None:
                 self.ck.close_read_session(buf.session)
             tokens = buf.arena
             assert tokens is not None
         if tokens.dtype == np.uint32:
             tokens = tokens.view(np.int32)   # zero-copy reinterpret
+        return tokens, view
+
+    def get_batch(self, step: int, timeout: float = 300.0) -> Tuple[np.ndarray, np.ndarray]:
+        """Blocking (scheduler-pumping) fetch of step ``step``; prefetches
+        ``step + prefetch_depth`` before returning (the overlap).
+
+        In zero-copy mode the returned arrays alias the step's session arena
+        and remain valid until the next ``get_batch*``/``close`` call."""
+        buf = self._wait_step(step, timeout)
+        tokens, _ = self._window_tokens(buf)
         inputs, labels = batch_from_tokens(
-            tokens, self.global_batch, self.seq_len
+            tokens, self.global_batch, self.seq_len,
+            allow_partial=not self.drop_remainder, pad_id=self.pad_id,
         )
+        # Host-side phase-2 permutation: the window passes through host
+        # reshaping/marshalling on its way to the device.
+        self.ingest.record_host_step(buf.nbytes)
+        return inputs, labels
+
+    def get_batch_device(
+        self,
+        step: int,
+        sharding=None,
+        *,
+        use_pallas: Optional[bool] = None,
+        timeout: float = 300.0,
+    ):
+        """Device-ingest fetch: one ``device_put`` of the whole-window arena
+        view, then on-device batch-major reassembly (fused label shift +
+        remainder padding). Returns JAX device arrays ``(inputs, labels)``.
+
+        See the module docstring for the staged-buffer lifetime contract.
+        ``sharding`` is forwarded to ``device_put`` for the staged window;
+        ``use_pallas`` picks the gather backend (default: Pallas on TPU,
+        XLA reference elsewhere)."""
+        import jax
+
+        from repro.kernels import ops
+
+        buf = self._wait_step(step, timeout)
+        tokens, view = self._window_tokens(buf)
+        itemsize = self.meta.itemsize
+        valid_tokens = buf.nbytes // itemsize
+        # The step's single host→device transfer (sharding=None → default
+        # device placement).
+        staged = jax.device_put(tokens, sharding)
+        if self.zero_copy:
+            with self._lock:
+                # borrow_view in _window_tokens appended the session; the
+                # staged refs pin arena + transfer until the next call.
+                self._staged.append(_StagedStep(
+                    staged=staged,
+                    host_tokens=tokens,
+                    host_view=view,
+                ))
+        inputs, labels = ops.device_ingest(
+            staged,
+            None,                       # arena view is file-order
+            global_batch=self.global_batch,
+            seq_len=self.seq_len,
+            valid_tokens=valid_tokens,
+            pad_id=self.pad_id,
+            use_pallas=use_pallas,
+        )
+        # Copy mode still pays the session→step-arena host copy before
+        # staging; only the zero-copy path truly has 0 host bytes.
+        self.ingest.record_device_step(
+            buf.nbytes, host_bytes=0 if self.zero_copy else buf.nbytes)
         return inputs, labels
 
     def idle(self, seconds: float) -> int:
@@ -248,7 +384,23 @@ class CkIOPipeline:
 
     def close(self) -> None:
         self._close_retired()
+        # Flush queued session starts, then join every reader thread of this
+        # file before the fd goes away — an in-flight prefetch session must
+        # not pread a closed file (shutdown is off the hot path; the pump
+        # here is what makes close deterministic).
+        self.ck.pump()
+        stopped = True
+        for sess in list(self.ck.director.sessions.values()):
+            if sess.file is self.file:
+                stopped &= sess.readers.stop()
         for buf in list(self._bufs.values()):
             if buf.session is not None:
                 self.ck.close_read_session(buf.session)
+        if not stopped:
+            # A straggling reader may still pread this fd; closing it now
+            # risks EBADF or — after fd reuse — reading the wrong file.
+            # Leak the fd and fail loud instead.
+            raise RuntimeError(
+                "pipeline close: reader thread(s) still running after stop "
+                "timeout; file left open")
         self.ck.close_sync(self.file)

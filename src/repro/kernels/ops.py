@@ -17,7 +17,11 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.mamba_scan import mamba_scan_pallas
-from repro.kernels.reassemble import reassemble_pallas
+from repro.kernels.reassemble import (
+    reassemble_pallas,
+    reassemble_tokens_pallas,
+    reassemble_window_pallas,
+)
 from repro.kernels.rglru_scan import rglru_scan_pallas
 
 
@@ -88,3 +92,95 @@ def reassemble(
     if use:
         return reassemble_pallas(src, idx, interpret=not _on_tpu())
     return ref.reassemble_ref(src, idx)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("global_batch", "seq_len", "window_tok_off",
+                     "valid_limit", "pad_id", "use_pallas"),
+)
+def reassemble_window(
+    linear: jax.Array,
+    *,
+    global_batch: int,
+    seq_len: int,
+    window_tok_off: int = 0,
+    valid_limit: int | None = None,
+    pad_id: int = 0,
+    use_pallas: bool | None = None,
+):
+    """File-order token buffer -> batch-major (inputs, labels) on device."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    kw = dict(global_batch=global_batch, seq_len=seq_len,
+              window_tok_off=window_tok_off, valid_limit=valid_limit,
+              pad_id=pad_id)
+    if use:
+        return reassemble_window_pallas(linear, interpret=not _on_tpu(), **kw)
+    return ref.window_batch_ref(linear, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("pad_id", "use_pallas"))
+def reassemble_tokens(
+    staged: jax.Array, row_idx: jax.Array, *, pad_id: int = 0,
+    use_pallas: bool | None = None,
+):
+    """Token-level gather fallback (non-block-uniform staged layouts)."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return reassemble_tokens_pallas(staged, row_idx, pad_id=pad_id,
+                                        interpret=not _on_tpu())
+    return ref.tokens_gather_ref(staged, row_idx, pad_id=pad_id)
+
+
+def device_ingest(
+    staged: jax.Array,            # (L,) staged tokens on device
+    gather=None,                  # np.ndarray token map or None (file order)
+    *,
+    global_batch: int,
+    seq_len: int,
+    window_tok_off: int = 0,
+    valid_tokens: int | None = None,
+    pad_id: int = 0,
+    block_tokens: int = 0,
+    use_pallas: bool | None = None,
+):
+    """One-transfer device reassembly: staged tokens -> (inputs, labels).
+
+    ``gather`` (host NumPy, from ``data.packing.token_gather_from_pieces``)
+    describes the staged layout: ``None`` means file order (the pipeline's
+    whole-window arena view), otherwise it is the arrival-order→file-order
+    token map. Layout dispatch happens on host metadata only:
+
+    * file order        -> fused window kernel directly;
+    * block permutation -> block-gather unpermute, then window kernel;
+    * anything else     -> token-level gather kernel.
+    """
+    S1 = seq_len + 1
+    if valid_tokens is None:
+        valid_tokens = global_batch * S1
+    valid_limit = window_tok_off + valid_tokens
+    if gather is None:
+        return reassemble_window(
+            staged, global_batch=global_batch, seq_len=seq_len,
+            window_tok_off=window_tok_off, valid_limit=valid_limit,
+            pad_id=pad_id, use_pallas=use_pallas)
+
+    from repro.data.packing import as_block_permutation, row_gather_index
+
+    perm = (as_block_permutation(gather, block_tokens)
+            if block_tokens else None)
+    if perm is not None:
+        T = block_tokens
+        blocks = staged[: perm.shape[0] * T].reshape(perm.shape[0], T)
+        linear = reassemble(
+            blocks, jnp.asarray(perm), use_pallas=use_pallas
+        ).reshape(-1)
+        return reassemble_window(
+            linear, global_batch=global_batch, seq_len=seq_len,
+            window_tok_off=window_tok_off, valid_limit=valid_limit,
+            pad_id=pad_id, use_pallas=use_pallas)
+    row_idx = row_gather_index(
+        gather, global_batch=global_batch, seq_len=seq_len,
+        window_tok_off=window_tok_off, valid_tokens=valid_tokens)
+    return reassemble_tokens(staged, jnp.asarray(row_idx), pad_id=pad_id,
+                             use_pallas=use_pallas)

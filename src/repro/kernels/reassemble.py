@@ -1,19 +1,42 @@
-"""Pallas TPU block-gather: CkIO phase-2 data permutation, on device.
+"""Pallas TPU kernels: CkIO phase-2 data permutation, on device.
 
 The paper's second phase permutes reader-striped data to consumer order in
 host DRAM. On TPU the right place for that permutation is on-device: the
-striped session buffer is DMA'd to HBM in arrival order, and this kernel
-gathers splinter-sized row blocks into batch-major order at HBM bandwidth.
+staged session buffer is DMA'd to HBM **once**, in whatever order the bytes
+arrived, and these kernels reassemble batch-major training arrays at HBM
+bandwidth. Three kernels cover the ingest pipeline:
 
-The splinter->destination map is a scalar-prefetch operand: it parametrizes
-the *source* BlockSpec index map, so each output block is produced by one
-aligned HBM->VMEM->HBM copy of its source block — a pure-bandwidth kernel
-with no compute, which is exactly the roofline shape of the paper's
-"data permutation" cost centre (§V-B).
+``reassemble_pallas``
+    Uniform block gather ``out[i] = src[idx[i]]`` over the leading axis
+    (``src`` may be 2-D ``(NB, T)`` token blocks or N-D row blocks). The
+    splinter->destination map is a scalar-prefetch operand parametrizing the
+    *source* BlockSpec index map, so each output block is one aligned
+    HBM->VMEM->HBM copy — a pure-bandwidth kernel with no compute, exactly
+    the roofline shape of the paper's "data permutation" cost centre (§V-B).
+    Used to restore file order from an arrival-ordered staging when splinter
+    boundaries are block-uniform.
 
-src (NB, rows, d), idx (NBo,) int32, out (NBo, rows, d): out[i] = src[idx[i]].
+``reassemble_window_pallas``
+    Fused batch-major reassembly of an LM step window: a file-order token
+    buffer (at any token offset ``window_tok_off``) becomes ``(inputs,
+    labels)`` of shape ``(B, S)`` in one kernel — the label shift-by-one
+    rides the same gather, and remainder windows (``valid_limit``) are
+    padded with ``pad_id`` on device. Each output row touches at most two
+    consecutive ``(S+1)``-token blocks of the source, so the kernel needs no
+    dynamic slicing: the split point ``r = window_tok_off % (S+1)`` is
+    static per call.
+
+``reassemble_tokens_pallas``
+    General token-level gather for staged layouts whose splinter boundaries
+    do *not* align to uniform blocks: per output row a precomputed
+    ``(B, S+1)`` index row gathers from the full staged buffer (``-1`` =
+    pad). The staged buffer is materialized whole per grid step, so this
+    path is bounded by VMEM (fine for per-host step windows); the block
+    kernels above are preferred whenever the layout permits.
 """
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,25 +50,165 @@ def _gather_kernel(idx_ref, src_ref, out_ref):
 
 
 def reassemble_pallas(
-    src: jax.Array,           # (NB, rows, d)
+    src: jax.Array,           # (NB, ...) — uniform blocks over axis 0
     idx: jax.Array,           # (NBo,) int32, values in [0, NB)
     *,
     interpret: bool = False,
 ) -> jax.Array:
-    NB, rows, d = src.shape
+    """Block gather ``out[i] = src[idx[i]]`` over the leading axis."""
+    if src.ndim < 2:
+        raise ValueError(f"src must have >= 2 dims (got shape {src.shape})")
+    rest = src.shape[1:]
     NBo = idx.shape[0]
+    zeros = (0,) * len(rest)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(NBo,),
         in_specs=[
-            pl.BlockSpec((1, rows, d), lambda i, idx_ref: (idx_ref[i], 0, 0)),
+            pl.BlockSpec((1,) + rest, lambda i, idx_ref: (idx_ref[i],) + zeros),
         ],
-        out_specs=pl.BlockSpec((1, rows, d), lambda i, idx_ref: (i, 0, 0)),
+        out_specs=pl.BlockSpec((1,) + rest, lambda i, idx_ref: (i,) + zeros),
     )
     return pl.pallas_call(
         _gather_kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((NBo, rows, d), src.dtype),
+        out_shape=jax.ShapeDtypeStruct((NBo,) + rest, src.dtype),
         interpret=interpret,
     )(idx, src)
+
+
+def reassemble_window_pallas(
+    linear: jax.Array,        # (L,) file-order tokens (session coordinates)
+    *,
+    global_batch: int,
+    seq_len: int,
+    window_tok_off: int = 0,
+    valid_limit: int | None = None,
+    pad_id: int = 0,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """File-order token buffer -> batch-major ``(inputs, labels)``, fused.
+
+    Output row ``b`` covers flat positions ``window_tok_off + b*(S+1) + j``;
+    ``labels`` are the same gather shifted by one token. Positions at or
+    beyond ``valid_limit`` (absolute, in ``linear`` coordinates — remainder
+    final windows) read as ``pad_id``. All split points are static, so each
+    row is assembled from two consecutive ``(S+1)``-token source blocks with
+    no dynamic slicing.
+    """
+    B, S = global_batch, seq_len
+    S1 = S + 1
+    q0, r = divmod(window_tok_off, S1)
+    full_limit = window_tok_off + B * S1
+    if valid_limit is None:
+        valid_limit = full_limit
+    mask_tail = valid_limit < full_limit
+
+    def masked(i, inp, lab):
+        if not mask_tail:
+            return inp, lab
+        pad = jnp.asarray(pad_id, dtype=inp.dtype)
+        base = window_tok_off + i * S1
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, S), 1)
+        return (jnp.where(pos < valid_limit, inp, pad),
+                jnp.where(pos + 1 < valid_limit, lab, pad))
+
+    out = jax.ShapeDtypeStruct((B, S), linear.dtype)
+    out_specs = [
+        pl.BlockSpec((1, S), lambda b: (b, 0)),
+        pl.BlockSpec((1, S), lambda b: (b, 0)),
+    ]
+    L = linear.shape[0]
+
+    if r == 0:
+        # Row-aligned window (the pipeline hot path): each output row is
+        # exactly one source block — no second block, and no pad copy
+        # unless this is a remainder window.
+        need = (q0 + B) * S1
+        if L < need:
+            linear = jnp.pad(linear, (0, need - L), constant_values=pad_id)
+        lin2 = linear[:need].reshape(q0 + B, S1)
+
+        def kern1(a_ref, inp_ref, lab_ref):
+            i = pl.program_id(0)
+            seg = a_ref[...]                                   # (1, S1)
+            inp_ref[...], lab_ref[...] = masked(i, seg[:, :S], seg[:, 1:])
+
+        return pl.pallas_call(
+            kern1,
+            grid=(B,),
+            in_specs=[pl.BlockSpec((1, S1), lambda b: (q0 + b, 0))],
+            out_specs=out_specs,
+            out_shape=[out, out],
+            interpret=interpret,
+        )(lin2)
+
+    # Unaligned window: row b spans source blocks q0+b and q0+b+1; pad so
+    # the +1 block exists.
+    need = (q0 + B + 1) * S1
+    if L < need:
+        linear = jnp.pad(linear, (0, need - L), constant_values=pad_id)
+    lin2 = linear[:need].reshape(q0 + B + 1, S1)
+
+    def kern2(a_ref, b_ref, inp_ref, lab_ref):
+        i = pl.program_id(0)
+        cat = jnp.concatenate([a_ref[...], b_ref[...]], axis=1)  # (1, 2*S1)
+        seg = cat[:, r : r + S1 + 1]                             # (1, S1+1)
+        inp_ref[...], lab_ref[...] = masked(i, seg[:, :S], seg[:, 1 : S + 1])
+
+    return pl.pallas_call(
+        kern2,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, S1), lambda b: (q0 + b, 0)),
+            pl.BlockSpec((1, S1), lambda b: (q0 + b + 1, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=[out, out],
+        interpret=interpret,
+    )(lin2, lin2)
+
+
+def reassemble_tokens_pallas(
+    staged: jax.Array,        # (L,) staged tokens, arbitrary layout
+    row_idx: jax.Array,       # (B, S+1) int32 staged positions; -1 = pad
+    *,
+    pad_id: int = 0,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Token-level gather: row ``b`` of the window is ``staged[row_idx[b]]``.
+
+    ``row_idx[b, j]`` is the staged position of window flat token
+    ``b*(S+1)+j`` (``j`` in ``[0, S+1)`` — the last column only feeds the
+    label shift); negative entries pad. The whole staged buffer is resident
+    per grid step, so sizing is VMEM-bounded — use the block kernels when
+    the staged layout is block-uniform.
+    """
+    B, S2 = row_idx.shape
+    S = S2 - 1
+    L = staged.shape[0]
+
+    def kern(idx_ref, st_ref, inp_ref, lab_ref):
+        idx = idx_ref[...]                                     # (1, S+1)
+        safe = jnp.clip(idx, 0, L - 1)
+        row = jnp.take(st_ref[...], safe[0], axis=0)[None, :]  # (1, S+1)
+        pad = jnp.asarray(pad_id, dtype=row.dtype)
+        inp_ref[...] = jnp.where(idx[:, :S] >= 0, row[:, :S], pad)
+        lab_ref[...] = jnp.where(idx[:, 1 : S + 1] >= 0, row[:, 1 : S + 1], pad)
+
+    out = jax.ShapeDtypeStruct((B, S), staged.dtype)
+    return pl.pallas_call(
+        kern,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, S2), lambda b: (b, 0)),
+            pl.BlockSpec((L,), lambda b: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S), lambda b: (b, 0)),
+            pl.BlockSpec((1, S), lambda b: (b, 0)),
+        ],
+        out_shape=[out, out],
+        interpret=interpret,
+    )(row_idx, staged)

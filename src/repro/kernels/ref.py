@@ -79,5 +79,53 @@ def lru_scan_ref(
 
 
 def reassemble_ref(src: jax.Array, idx: jax.Array) -> jax.Array:
-    """Block-gather: src (NB, rows, d), idx (NBo,) -> out (NBo, rows, d)."""
+    """Block-gather: src (NB, ...), idx (NBo,) -> out (NBo, ...)."""
     return jnp.take(src, idx, axis=0)
+
+
+def window_batch_ref(
+    linear: jax.Array,         # (L,) file-order tokens
+    *,
+    global_batch: int,
+    seq_len: int,
+    window_tok_off: int = 0,
+    valid_limit: int | None = None,
+    pad_id: int = 0,
+):
+    """Oracle for ``reassemble_window_pallas``: fused batch-major + shift.
+
+    Pure slice/reshape (no gather) — every split point is static, so XLA
+    lowers this to two strided copies; the pad and the tail mask only
+    materialize for remainder windows (the full-window hot path does no
+    extra device copy of the staged buffer)."""
+    B, S = global_batch, seq_len
+    S1 = S + 1
+    w0 = window_tok_off
+    full_limit = w0 + B * S1
+    if valid_limit is None:
+        valid_limit = full_limit
+    L = linear.shape[0]
+    if L < full_limit:
+        linear = jnp.pad(linear, (0, full_limit - L), constant_values=pad_id)
+    seqs = linear[w0:w0 + B * S1].reshape(B, S1)
+    inputs = seqs[:, :S]
+    labels = seqs[:, 1:]
+    if valid_limit < full_limit:
+        pad = jnp.asarray(pad_id, dtype=linear.dtype)
+        pos = (w0 + jnp.arange(B)[:, None] * S1 + jnp.arange(S)[None, :])
+        inputs = jnp.where(pos < valid_limit, inputs, pad)
+        labels = jnp.where(pos + 1 < valid_limit, labels, pad)
+    return inputs, labels
+
+
+def tokens_gather_ref(
+    staged: jax.Array, row_idx: jax.Array, *, pad_id: int = 0
+):
+    """Oracle for ``reassemble_tokens_pallas`` (row_idx < 0 pads)."""
+    S = row_idx.shape[1] - 1
+    safe = jnp.clip(row_idx, 0, staged.shape[0] - 1)
+    rows = jnp.take(staged, safe, axis=0)
+    pad = jnp.asarray(pad_id, dtype=staged.dtype)
+    inputs = jnp.where(row_idx[:, :S] >= 0, rows[:, :S], pad)
+    labels = jnp.where(row_idx[:, 1:S + 1] >= 0, rows[:, 1:S + 1], pad)
+    return inputs, labels

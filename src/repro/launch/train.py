@@ -51,6 +51,10 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--compression", default=None, choices=[None, "bf16"])
+    ap.add_argument("--device-ingest", action="store_true",
+                    help="one device_put of the whole step window + on-device"
+                         " batch reassembly (kernels/reassemble.py) instead"
+                         " of host-side batch construction")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -86,6 +90,11 @@ def main() -> None:
         return {"params": p, "opt": o}, metrics
 
     def batch_for(step: int):
+        if args.device_ingest:
+            # Device path: one host→device transfer of the whole window,
+            # batch-major reassembly + label shift on device.
+            x, y = pipe.get_batch_device(step % pipe.num_steps)
+            return {"tokens": x, "labels": y}
         x, y = pipe.get_batch(step % pipe.num_steps)
         return {"tokens": jnp.asarray(x), "labels": jnp.asarray(y)}
 
@@ -121,6 +130,7 @@ def main() -> None:
         "steps": sup.stats.steps_run,
         "failures": sup.stats.failures,
         "sched_tasks": summary.sched.stats,
+        "ingest": pipe.ingest.summary(),
     }, indent=2))
 
 

@@ -1,0 +1,527 @@
+"""Device-side reassembly: index maps, gather kernels (interpret mode),
+pipeline device-ingest path, staged-buffer lifetime, and elastic-shrink
+deregistration.
+
+Property tests run under hypothesis when installed (tests/hypothesis_compat);
+seeded randomized sweeps cover the same ground without it.
+"""
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core import CkIO, FileOptions
+from repro.data import CkIOPipeline, make_token_file
+from repro.data.packing import (
+    as_block_permutation,
+    pieces_in_arrival_order,
+    row_gather_index,
+    token_gather_from_pieces,
+)
+from repro.io.layout import plan_session
+from repro.kernels import ops, ref
+from repro.kernels.reassemble import (
+    reassemble_pallas,
+    reassemble_tokens_pallas,
+    reassemble_window_pallas,
+)
+
+
+# -- NumPy oracle -------------------------------------------------------------
+
+def np_batch_oracle(linear, B, S, w0=0, valid_limit=None, pad_id=0):
+    """Ground truth for the fused window reassembly (pure NumPy)."""
+    S1 = S + 1
+    full_limit = w0 + B * S1
+    if valid_limit is None:
+        valid_limit = full_limit
+    buf = np.full(full_limit + 1, pad_id, dtype=linear.dtype)
+    n = min(linear.size, full_limit + 1)
+    buf[:n] = linear[:n]
+    pos = w0 + np.arange(B)[:, None] * S1 + np.arange(S1 + 1)[None, :]
+    rows = buf[pos]
+    inputs = np.where(pos[:, :S] < valid_limit, rows[:, :S], pad_id)
+    labels = np.where(pos[:, 1:S + 1] < valid_limit, rows[:, 1:S + 1], pad_id)
+    return inputs, labels
+
+
+def random_arrival_pieces(rng, session_off, num_tokens, itemsize):
+    """Split a session into 1..8 contiguous token ranges, shuffle arrival."""
+    ncuts = int(rng.integers(0, min(7, num_tokens - 1) + 1))
+    cuts = np.sort(rng.choice(np.arange(1, num_tokens), size=ncuts,
+                              replace=False)) if ncuts else np.array([], int)
+    bounds = [0, *cuts.tolist(), num_tokens]
+    pieces = [
+        (session_off + bounds[i] * itemsize,
+         (bounds[i + 1] - bounds[i]) * itemsize)
+        for i in range(len(bounds) - 1)
+    ]
+    rng.shuffle(pieces)
+    return pieces
+
+
+# -- index-map construction ---------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_token_gather_roundtrips_random_pieces(seed):
+    rng = np.random.default_rng(seed)
+    num_tokens = int(rng.integers(1, 200))
+    session_off = int(rng.integers(0, 5)) * 4
+    toks = rng.integers(0, 1 << 30, size=num_tokens).astype(np.int32)
+    pieces = random_arrival_pieces(rng, session_off, num_tokens, 4)
+    g = token_gather_from_pieces(pieces, session_off, 4)
+    staged = np.concatenate([
+        toks[(off - session_off) // 4:(off - session_off) // 4 + nb // 4]
+        for off, nb in pieces
+    ])
+    np.testing.assert_array_equal(staged[g], toks)
+
+
+def test_token_gather_rejects_bad_plans():
+    with pytest.raises(ValueError):
+        token_gather_from_pieces([(0, 8), (4, 8)], 0, 4)       # overlap
+    with pytest.raises(ValueError):
+        token_gather_from_pieces([(0, 6)], 0, 4)               # misaligned
+    with pytest.raises(ValueError):
+        token_gather_from_pieces([(8, 8)], 0, 4)               # outside
+
+
+def test_as_block_permutation_detects_and_rejects():
+    T = 4
+    perm = np.array([2, 0, 3, 1], np.int32)
+    # g for "file block f sits at staged block perm[f]"
+    g = (perm[:, None] * T + np.arange(T)[None, :]).reshape(-1)
+    got = as_block_permutation(g, T)
+    assert got is not None
+    np.testing.assert_array_equal(got, perm)
+    # identity
+    ident = np.arange(16, dtype=np.int32)
+    np.testing.assert_array_equal(as_block_permutation(ident, 4),
+                                  np.arange(4))
+    # non-uniform layout -> None
+    g2 = g.copy()
+    g2[[0, 1]] = g2[[1, 0]]
+    assert as_block_permutation(g2, T) is None
+    assert as_block_permutation(g, 3) is None                  # wrong T
+
+
+def test_row_gather_index_marks_padding():
+    g = np.arange(20, dtype=np.int32)
+    idx = row_gather_index(g, global_batch=2, seq_len=3, window_tok_off=2,
+                           valid_tokens=7)
+    assert idx.shape == (2, 4)            # (B, S+1)
+    # window flat token p valid iff p < 7 and 2+p < 20
+    S1 = 4
+    for b in range(2):
+        for j in range(4):
+            p = b * S1 + j
+            if p < 7:
+                assert idx[b, j] == 2 + p
+            else:
+                assert idx[b, j] == -1
+
+
+# -- kernels vs oracle (interpret mode) ---------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_window_kernel_random_offsets_and_remainders(seed):
+    rng = np.random.default_rng(100 + seed)
+    B = int(rng.integers(1, 5))
+    S = int(rng.integers(2, 17))
+    S1 = S + 1
+    w0 = int(rng.integers(0, 3 * S1))
+    valid = int(rng.integers(1, B * S1 + 1))
+    lin = rng.integers(1, 1 << 20, size=w0 + valid).astype(np.int32)
+    want = np_batch_oracle(lin, B, S, w0, w0 + valid, pad_id=0)
+    got = reassemble_window_pallas(
+        jnp.asarray(lin), global_batch=B, seq_len=S, window_tok_off=w0,
+        valid_limit=w0 + valid, pad_id=0, interpret=True)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), w)
+    # jnp reference agrees too
+    got_ref = ref.window_batch_ref(
+        jnp.asarray(lin), global_batch=B, seq_len=S, window_tok_off=w0,
+        valid_limit=w0 + valid, pad_id=0)
+    for g, w in zip(got_ref, want):
+        np.testing.assert_array_equal(np.asarray(g), w)
+
+
+def test_window_kernel_label_shift_exact():
+    B, S = 2, 4
+    lin = np.arange(100, 100 + B * (S + 1) + 1, dtype=np.int32)
+    x, y = reassemble_window_pallas(jnp.asarray(lin), global_batch=B,
+                                    seq_len=S, interpret=True)
+    np.testing.assert_array_equal(np.asarray(x),
+                                  [[100, 101, 102, 103], [105, 106, 107, 108]])
+    np.testing.assert_array_equal(np.asarray(y),
+                                  [[101, 102, 103, 104], [106, 107, 108, 109]])
+
+
+@pytest.mark.parametrize("NB,T", [(6, 4), (3, 8), (1, 5)])
+def test_block_gather_2d_roundtrip(NB, T):
+    rng = np.random.default_rng(7)
+    src = rng.integers(0, 1000, size=(NB, T)).astype(np.int32)
+    perm = rng.permutation(NB).astype(np.int32)
+    out = reassemble_pallas(jnp.asarray(src), jnp.asarray(perm),
+                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), src[perm])
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_token_kernel_matches_ref(seed):
+    rng = np.random.default_rng(200 + seed)
+    B = int(rng.integers(1, 4))
+    S = int(rng.integers(2, 10))
+    L = int(rng.integers(B * (S + 1), 4 * B * (S + 1)))
+    staged = rng.integers(0, 1000, size=L).astype(np.int32)
+    row_idx = rng.integers(-1, L, size=(B, S + 1)).astype(np.int32)
+    got = reassemble_tokens_pallas(jnp.asarray(staged), jnp.asarray(row_idx),
+                                   pad_id=9, interpret=True)
+    want = ref.tokens_gather_ref(jnp.asarray(staged), jnp.asarray(row_idx),
+                                 pad_id=9)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# -- end-to-end device_ingest dispatch ----------------------------------------
+
+@pytest.mark.parametrize("seed", range(5))
+def test_device_ingest_arbitrary_arrival_order(seed):
+    """Arbitrary splinter permutations + window offsets + remainder windows
+    round-trip exactly through the on-device path (interpret kernels)."""
+    rng = np.random.default_rng(300 + seed)
+    B = int(rng.integers(1, 4))
+    S = int(rng.integers(2, 12))
+    S1 = S + 1
+    w0 = int(rng.integers(0, 2 * S1))
+    valid = int(rng.integers(1, B * S1 + 1))
+    session_tokens = rng.integers(1, 1 << 20, size=w0 + valid).astype(np.int32)
+    pieces = random_arrival_pieces(rng, 0, session_tokens.size, 4)
+    g = token_gather_from_pieces(pieces, 0, 4)
+    staged = np.concatenate(
+        [session_tokens[o // 4:o // 4 + nb // 4] for o, nb in pieces])
+    want = np_batch_oracle(session_tokens, B, S, w0, w0 + valid, pad_id=0)
+    got = ops.device_ingest(
+        jnp.asarray(staged), g, global_batch=B, seq_len=S,
+        window_tok_off=w0, valid_tokens=valid, use_pallas=True)
+    for a, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), w)
+
+
+def test_device_ingest_block_permutation_path():
+    rng = np.random.default_rng(9)
+    T, NB, B, S = 8, 6, 4, 11   # NB*T = 48 = B*(S+1) tokens
+    session_tokens = rng.integers(1, 1000, size=NB * T).astype(np.int32)
+    perm = rng.permutation(NB).astype(np.int32)
+    pieces = [(int(f) * T * 4, T * 4)
+              for f in np.argsort(perm)]       # arrival = staged order
+    g = token_gather_from_pieces(pieces, 0, 4)
+    assert as_block_permutation(g, T) is not None
+    staged = session_tokens.reshape(NB, T)[np.argsort(perm)].reshape(-1)
+    want = np_batch_oracle(session_tokens, B, S)
+    got = ops.device_ingest(jnp.asarray(staged), g, global_batch=B,
+                            seq_len=S, block_tokens=T, use_pallas=True)
+    for a, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), w)
+
+
+# -- hypothesis properties (auto-skipped when hypothesis is missing) ----------
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_prop_token_gather_roundtrip(data):
+    num_tokens = data.draw(st.integers(1, 300))
+    session_off = data.draw(st.integers(0, 8)) * 4
+    ncuts = data.draw(st.integers(0, min(10, num_tokens - 1)))
+    cuts = sorted(data.draw(st.sets(
+        st.integers(1, num_tokens - 1), min_size=ncuts, max_size=ncuts))
+    ) if num_tokens > 1 else []
+    bounds = [0, *cuts, num_tokens]
+    pieces = [
+        (session_off + bounds[i] * 4, (bounds[i + 1] - bounds[i]) * 4)
+        for i in range(len(bounds) - 1)
+    ]
+    pieces = data.draw(st.permutations(pieces))
+    toks = np.arange(num_tokens, dtype=np.int32)
+    g = token_gather_from_pieces(pieces, session_off, 4)
+    staged = np.concatenate([
+        toks[(o - session_off) // 4:(o - session_off) // 4 + nb // 4]
+        for o, nb in pieces])
+    np.testing.assert_array_equal(staged[g], toks)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    B=st.integers(1, 4), S=st.integers(2, 16),
+    w0=st.integers(0, 40), frac=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_prop_window_kernel_matches_oracle(B, S, w0, frac, seed):
+    S1 = S + 1
+    valid = max(1, int(frac * B * S1))
+    rng = np.random.default_rng(seed)
+    lin = rng.integers(1, 1 << 20, size=w0 + valid).astype(np.int32)
+    want = np_batch_oracle(lin, B, S, w0, w0 + valid)
+    got = reassemble_window_pallas(
+        jnp.asarray(lin), global_batch=B, seq_len=S, window_tok_off=w0,
+        valid_limit=w0 + valid, interpret=True)
+    for a, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), w)
+
+
+@settings(max_examples=25, deadline=None)
+@given(B=st.integers(1, 3), S=st.integers(2, 10),
+       seed=st.integers(0, 2**16))
+def test_prop_device_ingest_permuted_pieces(B, S, seed):
+    rng = np.random.default_rng(seed)
+    S1 = S + 1
+    w0 = int(rng.integers(0, 2 * S1))
+    valid = int(rng.integers(1, B * S1 + 1))
+    toks = rng.integers(1, 1 << 20, size=w0 + valid).astype(np.int32)
+    pieces = random_arrival_pieces(rng, 0, toks.size, 4)
+    g = token_gather_from_pieces(pieces, 0, 4)
+    staged = np.concatenate(
+        [toks[o // 4:o // 4 + nb // 4] for o, nb in pieces])
+    want = np_batch_oracle(toks, B, S, w0, w0 + valid)
+    got = ops.device_ingest(jnp.asarray(staged), g, global_batch=B,
+                            seq_len=S, window_tok_off=w0,
+                            valid_tokens=valid, use_pallas=True)
+    for a, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), w)
+
+
+# -- pipeline device path -----------------------------------------------------
+
+@pytest.fixture(scope="module")
+def corpus(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("devingest") / "corpus.bin")
+    make_token_file(path, 50_000, vocab_size=321, seed=11)
+    raw = np.fromfile(path, dtype=np.uint32, offset=4096).view(np.int32)
+    return path, raw
+
+
+def make_pipe(path, **kw):
+    kw.setdefault("num_pes", 2)
+    kw.setdefault("num_consumers", 8)
+    kw.setdefault("file_opts", FileOptions(num_readers=2,
+                                           splinter_bytes=32 * 1024))
+    return CkIOPipeline(path, global_batch=4, seq_len=64, **kw)
+
+
+def test_pipeline_device_path_matches_file(corpus):
+    path, raw = corpus
+    pipe = make_pipe(path)
+    need = 4 * 65
+    for s in range(4):
+        x, y = pipe.get_batch_device(s)
+        ref_w = raw[s * need:(s + 1) * need].reshape(4, 65)
+        np.testing.assert_array_equal(np.asarray(x), ref_w[:, :-1])
+        np.testing.assert_array_equal(np.asarray(y), ref_w[:, 1:])
+    m = pipe.ingest.summary()
+    assert m["host_permute_bytes"] == 0
+    assert m["h2d_transfers"] == 4          # exactly one transfer per step
+    assert m["device_steps"] == 4
+    pipe.close()
+
+
+def test_pipeline_device_matches_host_path(corpus):
+    path, _ = corpus
+    pipe_h = make_pipe(path)
+    pipe_d = make_pipe(path)
+    for s in range(3):
+        xh, yh = pipe_h.get_batch(s)
+        xd, yd = pipe_d.get_batch_device(s)
+        np.testing.assert_array_equal(xh, np.asarray(xd))
+        np.testing.assert_array_equal(yh, np.asarray(yd))
+    assert pipe_h.ingest.host_permute_bytes > 0
+    assert pipe_d.ingest.host_permute_bytes == 0
+    pipe_h.close()
+    pipe_d.close()
+
+
+def test_pipeline_device_pallas_interpret_matches(corpus):
+    path, raw = corpus
+    pipe = make_pipe(path)
+    need = 4 * 65
+    x, y = pipe.get_batch_device(0, use_pallas=True)   # interpret on CPU
+    ref_w = raw[:need].reshape(4, 65)
+    np.testing.assert_array_equal(np.asarray(x), ref_w[:, :-1])
+    np.testing.assert_array_equal(np.asarray(y), ref_w[:, 1:])
+    pipe.close()
+
+
+def test_pipeline_device_remainder_window(tmp_path):
+    path = str(tmp_path / "rem.bin")
+    make_token_file(path, 1000, vocab_size=50, seed=3)
+    raw = np.fromfile(path, dtype=np.uint32, offset=4096).view(np.int32)
+    pipe = CkIOPipeline(path, global_batch=2, seq_len=32, num_pes=2,
+                        drop_remainder=False,
+                        file_opts=FileOptions(num_readers=2))
+    S1 = 33
+    rows = 2 * S1
+    assert pipe.num_steps == (1000 + rows - 1) // rows
+    last = pipe.num_steps - 1
+    valid = 1000 - last * rows
+    assert 0 < valid < rows
+    want = np_batch_oracle(raw[last * rows:], 2, 32, 0, valid)
+    xd, yd = pipe.get_batch_device(last)
+    np.testing.assert_array_equal(np.asarray(xd), want[0])
+    np.testing.assert_array_equal(np.asarray(yd), want[1])
+    # host path agrees on the padded remainder
+    xh, yh = pipe.get_batch(last)
+    np.testing.assert_array_equal(xh, want[0])
+    np.testing.assert_array_equal(yh, want[1])
+    pipe.close()
+
+
+def test_pipeline_copy_mode_device_path(corpus):
+    path, raw = corpus
+    pipe = make_pipe(path, zero_copy=False)
+    need = 4 * 65
+    x, y = pipe.get_batch_device(0)
+    np.testing.assert_array_equal(np.asarray(x),
+                                  raw[:need].reshape(4, 65)[:, :-1])
+    assert pipe.ingest.h2d_transfers == 1
+    # copy mode pays the session→step-arena copy; the counter must say so
+    assert pipe.ingest.host_permute_bytes == need * 4
+    pipe.close()
+
+
+def test_pipeline_arrival_order_feeds_index_map(corpus):
+    """The exposed per-session arrival order + the layout plan reconstruct
+    the session exactly (the staged-by-arrival model the maps serve)."""
+    path, raw = corpus
+    pipe = make_pipe(path, file_opts=FileOptions(num_readers=3,
+                                                 splinter_bytes=8 * 1024))
+    pipe.get_batch(0)
+    sess = pipe._retired[-1]
+    order = pipe.ck.session_arrival_order(sess)
+    assert sorted(order) == list(range(len(sess.plan.splinters)))
+    pieces = pieces_in_arrival_order(sess.plan.splinters, order)
+    g = token_gather_from_pieces(pieces, sess.offset, 4)
+    # simulate the arrival-ordered staging from the file bytes
+    base = (sess.offset - 4096) // 4
+    session_toks = raw[base:base + sess.nbytes // 4]
+    staged = np.concatenate(
+        [raw[(o - 4096) // 4:(o - 4096) // 4 + nb // 4] for o, nb in pieces])
+    np.testing.assert_array_equal(staged[g], session_toks)
+    pipe.close()
+
+
+# -- lifetime regression ------------------------------------------------------
+
+def test_staged_view_retires_on_next_fetch(corpus):
+    path, raw = corpus
+    pipe = make_pipe(path)
+    need = 4 * 65
+    x0, y0 = pipe.get_batch_device(0)
+    st = pipe._staged[-1]
+    mv = st.host_view
+    assert mv is not None and not st.staged is None
+    x1, _ = pipe.get_batch_device(1)
+    # use-after-retire raises rather than reading freed arena
+    with pytest.raises(ValueError):
+        bytes(mv)
+    assert st.host_tokens is None and st.staged is None
+    # the device arrays own their storage: both steps still readable
+    np.testing.assert_array_equal(np.asarray(x0),
+                                  raw[:need].reshape(4, 65)[:, :-1])
+    np.testing.assert_array_equal(np.asarray(x1),
+                                  raw[need:2 * need].reshape(4, 65)[:, :-1])
+    pipe.close()
+
+
+def test_staged_view_valid_until_next_fetch(corpus):
+    path, raw = corpus
+    pipe = make_pipe(path)
+    pipe.get_batch_device(2)
+    st = pipe._staged[-1]
+    # until the next get_batch*/close the staged host view stays readable
+    got = np.frombuffer(bytes(st.host_view), dtype=np.int32)
+    need = 4 * 65
+    np.testing.assert_array_equal(got, raw[2 * need:3 * need])
+    pipe.close()
+
+
+def test_close_releases_staged_refs(corpus):
+    path, _ = corpus
+    pipe = make_pipe(path)
+    pipe.get_batch_device(0)
+    mv = pipe._staged[-1].host_view
+    pipe.close()
+    with pytest.raises(ValueError):
+        bytes(mv)
+
+
+def test_zero_copy_across_resize_and_migration(corpus):
+    path, raw = corpus
+    pipe = make_pipe(path)
+    need = 4 * 65
+    sessions = []
+    x, _ = pipe.get_batch_device(0)
+    sessions.append(pipe._retired[-1])
+    pipe.resize(12)                       # grow mid-stream
+    x1, _ = pipe.get_batch_device(1)
+    sessions.append(pipe._retired[-1])
+    pipe.migrate_consumer(0, 1)
+    pipe.resize(5)                        # shrink mid-stream
+    x2, _ = pipe.get_batch_device(2)
+    sessions.append(pipe._retired[-1])
+    for s, sess in enumerate(sessions):
+        assert sess.metrics.bytes_copied == 0, f"step {s} copied bytes"
+    np.testing.assert_array_equal(np.asarray(x2),
+                                  raw[2 * need:3 * need].reshape(4, 65)[:, :-1])
+    assert pipe.ingest.host_permute_bytes == 0
+    pipe.close()
+
+
+# -- elastic shrink deregistration (satellite fix) ----------------------------
+
+def test_resize_shrink_deregisters_consumers(corpus):
+    path, _ = corpus
+    pipe = make_pipe(path)
+    loc = pipe.ck.locations
+    assert loc.count() == 8
+    pipe.resize(16)
+    assert loc.count() == 16
+    pipe.resize(4)
+    assert loc.count() == 4               # dropped consumers deregistered
+    for _ in range(5):                    # shrink→grow cycles must not leak
+        pipe.resize(12)
+        pipe.resize(6)
+    assert loc.count() == 6
+    pipe.close()
+
+
+def test_deregistered_consumer_delivery_falls_back_home(tmp_path):
+    """A completion racing an elastic shrink lands on the home PE instead of
+    raising KeyError on the retired virtual id."""
+    ck = CkIO(num_pes=4)
+    client = ck.make_client(pe=3)
+    got = []
+    cb = client.callback(got.append)
+    client.deregister()
+    cb.send(ck.sched, "late-completion")   # must not raise
+    ck.sched.pump()
+    assert got == ["late-completion"]
+    assert ck.locations.stale_deliveries == 1
+    client.deregister()                    # idempotent
+    with pytest.raises(KeyError):
+        client.migrate(0)                  # strict ops still raise
+
+
+def test_shrink_with_inflight_reads_completes(tmp_path):
+    """Shrink while a delayed session is mid-read: the step still completes
+    (stale deliveries fall back) and nothing leaks."""
+    path = str(tmp_path / "slow.bin")
+    make_token_file(path, 30_000, vocab_size=77, seed=8)
+    opts = FileOptions(num_readers=2, splinter_bytes=16 * 1024,
+                       delay_model=lambda r, sp: 0.02)
+    pipe = CkIOPipeline(path, global_batch=2, seq_len=32, num_pes=2,
+                        num_consumers=8, file_opts=opts)
+    pipe.resize(2)                         # drop consumers with reads in flight
+    x, y = pipe.get_batch(0)
+    assert x.shape == (2, 32)
+    assert pipe.ck.locations.count() == 2
+    pipe.close()                           # joins the delayed reader threads
