@@ -76,6 +76,14 @@ def perf_device_ingest() -> None:
     m.run(quick=common.QUICK)
 
 
+def perf_streaming() -> None:
+    # Writes BENCH_streaming.json at the repo root (whole-window vs
+    # event-driven streamed staging: overlap fraction, stage latency,
+    # in-flight high-water mark, bit-identical batches).
+    from benchmarks import perf_streaming as m
+    m.run(quick=common.QUICK)
+
+
 ALL = [
     fig1_naive_overdecomposition,
     fig2_disk_vs_network,
@@ -88,6 +96,7 @@ ALL = [
     perf_input_hillclimb,
     perf_hotpath,
     perf_device_ingest,
+    perf_streaming,
 ]
 
 

@@ -13,9 +13,13 @@
 #   benchmarks/perf_device_ingest.py --quick device-ingest path (incl. the
 #                                            Pallas interpret-mode kernel
 #                                            check)
-# Coverage floor: line coverage of src/repro/core + src/repro/data over the
-# core/data-focused tests must stay >= the floor in scripts/coverage_floor.py
-# (stdlib settrace fallback — no third-party deps required).
+#   benchmarks/perf_streaming.py --quick     event-driven splinter streaming
+#                                            (overlap fraction + streamed/
+#                                            whole-window bit-equality)
+# Coverage floor: line coverage of src/repro/core + src/repro/data +
+# src/repro/io over the core/data-focused tests must stay >= the floor in
+# scripts/coverage_floor.py (stdlib settrace fallback — no third-party deps
+# required).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -28,7 +32,10 @@ python benchmarks/perf_hotpath.py --quick
 echo "== device-ingest benchmark (smoke, interpret check) =="
 python benchmarks/perf_device_ingest.py --quick
 
-echo "== coverage floor (core + data) =="
+echo "== streaming benchmark (smoke, overlap + equivalence) =="
+python benchmarks/perf_streaming.py --quick
+
+echo "== coverage floor (core + data + io) =="
 python scripts/coverage_floor.py
 
 echo "== ci OK =="

@@ -3,22 +3,30 @@ input with reader/consumer decomposition independence, greedy read sessions,
 splintered I/O, work-stealing straggler mitigation, and migratable consumers.
 """
 from repro.core.api import CkIO
-from repro.core.autotune import AutoTuner, suggest_num_readers
-from repro.core.buffers import BufferReaderSet, NetworkModel, ReaderOptions
+from repro.core.autotune import AutoTuner, SplinterSizer, suggest_num_readers
+from repro.core.buffers import (
+    BufferReaderSet,
+    NetworkModel,
+    ReaderOptions,
+    SplinterEvent,
+)
 from repro.core.futures import CkCallback, CkFuture
 from repro.core.migration import Client, LocationManager, VirtualProxy
 from repro.core.scheduler import BackgroundWorker, TaskScheduler
-from repro.core.metrics import IngestMetrics, SessionMetrics
+from repro.core.metrics import IngestMetrics, SessionMetrics, StreamMetrics
 from repro.core.session import FileHandle, FileOptions, Session
 from repro.core.assembler import ReadComplete
 
 __all__ = [
     "CkIO",
     "AutoTuner",
+    "SplinterSizer",
     "suggest_num_readers",
     "BufferReaderSet",
     "NetworkModel",
     "ReaderOptions",
+    "SplinterEvent",
+    "StreamMetrics",
     "CkCallback",
     "CkFuture",
     "Client",

@@ -15,6 +15,15 @@ migratable client's virtual proxy) — no operation blocks a PE. Futures-based
 sugar (``open_sync``, ``read_future``, ...) is provided for driver code and
 tests; the futures pump the scheduler, preserving split-phase semantics.
 
+Streaming (per-splinter completion events)
+------------------------------------------
+``read_stream(session, on_splinter, ...)`` subscribes to the session's
+splinter completion stream: one callback per completed splinter read (with
+arrival metadata), delivered as scheduler tasks — optionally routed through
+a consumer's virtual proxy with drop-stale semantics. It is the primitive
+under the pipeline's streamed host→device staging (``data/pipeline.py``,
+``streaming=True``); ``end_stream`` unsubscribes.
+
 Zero-copy reads (borrowed views)
 --------------------------------
 ``read(..., data=None)`` / ``read_view(...)`` select the zero-copy delivery
@@ -45,7 +54,8 @@ Tuning knobs (``FileOptions``)
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional, Union
+import threading
+from typing import Any, Callable, List, Optional, Union
 
 from repro.core.director import Director
 from repro.core.futures import CkCallback, CkFuture
@@ -206,6 +216,80 @@ class CkIO:
         self.director.managers[pe].assembler.submit(
             session, offset, nbytes, None, cb, materialize_view=False
         )
+
+    def read_stream(
+        self,
+        session: Session,
+        on_splinter: Callable,
+        *,
+        client: Optional[Client] = None,
+        route: Optional[Callable] = None,
+        pe: int = 0,
+        on_complete: Optional[Callable[[], None]] = None,
+        replay: bool = True,
+    ) -> int:
+        """Subscribe to ``session``'s per-splinter completion stream.
+
+        The event-driven counterpart of ``read``: instead of waiting for a
+        byte range, the caller is invoked once per **splinter** as its read
+        completes, with a ``SplinterEvent`` (splinter id, owning reader,
+        absolute offset, size, arena offset, arrival timestamp). This is the
+        primitive a streaming consumer (e.g. the pipeline's host→device
+        stager) builds on: data can be shipped onward while the rest of the
+        session is still being read.
+
+        Split-phase like everything else: ``on_splinter`` is *enqueued as a
+        task*, never run on the I/O thread. Routing, in precedence order:
+
+        * ``route`` — callable ``SplinterEvent -> Optional[Client]``; the
+          event is delivered through the returned client's virtual proxy
+          with **drop-stale** semantics (a retired/deregistered consumer's
+          events are dropped and counted in
+          ``locations.stale_deliveries``, never rerouted to a reused
+          slot); ``route`` returning ``None`` falls back to ``pe``.
+        * ``client`` — fixed client, same drop-stale proxy delivery.
+        * ``pe`` — fixed PE (default 0).
+
+        With ``replay=True`` splinters that completed before the call are
+        delivered first (in arrival order) — subscribing after the greedy
+        prefetch started misses nothing. ``on_complete`` (optional) is
+        enqueued on ``pe`` after the last splinter's delivery has been
+        issued; it requires ``replay=True`` (without replay, splinters that
+        completed before the subscription are never delivered, so the count
+        could never reach the total and the callback would silently never
+        fire). Returns a token for ``end_stream``.
+        """
+        if session.closed:
+            raise RuntimeError("read_stream() on closed session")
+        if on_complete is not None and not replay:
+            raise ValueError("on_complete requires replay=True (completions "
+                             "before the subscription would never be counted)")
+        total = len(session.plan.splinters)
+        state = {"n": 0}
+        lock = threading.Lock()
+
+        def deliver(ev) -> None:
+            target = route(ev) if route is not None else client
+            if target is not None:
+                target.callback(on_splinter, drop_stale=True).send(
+                    self.sched, ev)
+            else:
+                self.sched.enqueue(pe, on_splinter, ev, label="ckio-stream")
+            if on_complete is not None:
+                with lock:
+                    state["n"] += 1
+                    last = state["n"] == total
+                if last:
+                    self.sched.enqueue(pe, on_complete,
+                                       label="ckio-stream-end")
+
+        return session.subscribe_splinters(deliver, replay=replay)
+
+    def end_stream(self, session: Session, token: int) -> None:
+        """Unsubscribe a ``read_stream`` token (barrier: no further
+        deliveries are *issued* once this returns; tasks already enqueued
+        still run — guard the consumer, see the pipeline's retired check)."""
+        session.unsubscribe_splinters(token)
 
     def read_future(
         self,

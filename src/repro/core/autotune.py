@@ -1,6 +1,6 @@
-"""Reader-count selection (paper future-work §VI-A, implemented).
+"""Online tuning of the reader layer (paper future-work §VI-A, implemented).
 
-Two pieces:
+Three pieces:
 
 * ``suggest_num_readers`` — a closed-form heuristic from file size and
   machine shape. The paper's Figs. 1/4 show a U-curve: too few readers miss
@@ -11,11 +11,24 @@ Two pieces:
   observations across sessions and explores the power-of-two neighbourhood
   of the current best (the search-based approach of Behzad et al. [4] that
   the paper cites, restricted to a single knob).
+* ``SplinterSizer`` — dynamic splinter sizing for the streaming delivery
+  path: sizes the unit of physical I/O from observed per-reader throughput
+  (large splinters on fast streaming stripes — fewer syscalls, better
+  sequential bandwidth) shrunk under steal pressure (small splinters near
+  straggler-stolen tails — finer-grained stealing, tighter completion
+  bound).
+
+``AutoTuner`` and ``SplinterSizer`` share one observation path:
+``record_session(metrics)`` takes the ``SessionMetrics`` every session
+already collects — the Director feeds both on session close, so any
+controller added later observes for free.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
+
+from repro.core.metrics import SessionMetrics
 
 
 def suggest_num_readers(
@@ -34,15 +47,32 @@ def suggest_num_readers(
 
 @dataclass
 class AutoTuner:
-    """Online power-of-two hillclimb over the reader count."""
+    """Online power-of-two hillclimb over the reader count.
+
+    Exploration is **deterministic**: given the same observation history,
+    ``suggest`` returns the same value. The candidate order is fixed —
+    current best, then its half, then its double — and the first candidate
+    without observations (and within the ``4 * num_pes`` contention cap) is
+    explored; with the whole neighbourhood observed, the best is exploited.
+    Ties in ``best()`` break toward the reader count observed first
+    (dict insertion order), which is itself deterministic per history.
+    """
 
     num_pes: int
     num_nodes: int = 1
     observations: Dict[int, List[float]] = field(default_factory=dict)
-    _trial_queue: List[int] = field(default_factory=list)
 
     def record(self, num_readers: int, throughput: float) -> None:
         self.observations.setdefault(num_readers, []).append(throughput)
+
+    def record_session(self, metrics: SessionMetrics) -> None:
+        """Shared observation hook: fold one finished session's metrics in.
+
+        Sessions that never read a byte (e.g. cancelled before any splinter
+        landed) carry no throughput signal and are skipped."""
+        bps = metrics.throughput_bytes_per_s()
+        if metrics.num_readers > 0 and bps > 0:
+            self.record(metrics.num_readers, bps)
 
     def _score(self, r: int) -> float:
         obs = self.observations.get(r, [])
@@ -59,8 +89,59 @@ class AutoTuner:
             return seed
         best = self.best()
         assert best is not None
-        # explore the untried half/double neighbour with the best prior
+        # Fixed exploration order: best, half, double — first untried wins.
         for cand in (best, max(1, best // 2), best * 2):
             if cand not in self.observations and cand <= 4 * self.num_pes:
                 return cand
         return best
+
+
+@dataclass
+class SplinterSizer:
+    """Observation-driven splinter sizing (streaming controller).
+
+    Targets ``target_splinter_s`` seconds of I/O per splinter at the
+    observed per-reader-thread bandwidth, then shrinks under steal pressure:
+    a session where many splinters were stolen is straggler-bound, and
+    smaller splinters bound its completion tighter (steal granularity).
+    Both signals are EMA-smoothed so one outlier session cannot whipsaw the
+    size; the result is clamped to ``[min_bytes, max_bytes]`` and rounded
+    down to a 256 KiB multiple (FS-block friendly, stable across jitter).
+    The smoothing + quantization also bound a side effect on the streamed
+    device path: every size change alters the per-splinter chunk shapes
+    and retraces the fused consume executable once, so suggestions must
+    converge rather than wander (see data/pipeline.py).
+    """
+
+    min_bytes: int = 256 * 1024
+    max_bytes: int = 64 * 1024 * 1024
+    target_splinter_s: float = 0.05
+    alpha: float = 0.5                 # EMA weight of the newest session
+    sessions_observed: int = 0
+    ema_reader_bps: float = 0.0
+    ema_steal_frac: float = 0.0
+
+    def record_session(self, metrics: SessionMetrics) -> None:
+        """Same shared hook as ``AutoTuner.record_session``."""
+        if metrics.read_calls <= 0 or metrics.read_time_s <= 0:
+            return
+        # read_time_s is summed across reader threads, so this is per-thread
+        # (per-stripe) bandwidth — exactly the rate one splinter is read at.
+        bps = metrics.bytes_read / metrics.read_time_s
+        steal_frac = metrics.steals / metrics.read_calls
+        a = self.alpha if self.sessions_observed else 1.0
+        self.ema_reader_bps += a * (bps - self.ema_reader_bps)
+        self.ema_steal_frac += a * (steal_frac - self.ema_steal_frac)
+        self.sessions_observed += 1
+
+    def suggest(self, default: int) -> int:
+        """Splinter size for the next session; ``default`` until observed."""
+        if not self.sessions_observed or self.ema_reader_bps <= 0:
+            return default
+        size = self.ema_reader_bps * self.target_splinter_s
+        # Steal pressure shrinks the unit: at >=50% stolen splinters the
+        # size bottoms out at a quarter of the throughput-derived target.
+        shrink = 1.0 - 1.5 * min(self.ema_steal_frac, 0.5)
+        size = int(size * shrink)
+        size = max(self.min_bytes, min(self.max_bytes, size))
+        return max(self.min_bytes, (size // (256 * 1024)) * (256 * 1024))

@@ -116,6 +116,25 @@ class _Waiter:
     fire: Callable[[], None]
 
 
+@dataclass(frozen=True)
+class SplinterEvent:
+    """One splinter-read completion, as seen by stream subscribers.
+
+    Carries everything a streamed consumer needs to act on the arrival
+    without touching the reader set again: identity (global splinter id +
+    owning reader), location (absolute file offset and the offset of the
+    bytes inside the session arena), size, and the ``perf_counter``
+    timestamp of the completion — the anchor for arrival→staged latency.
+    """
+
+    index: int          # global splinter id within the session
+    reader: int         # owning reader (post-steal: the planned owner)
+    offset: int         # absolute file offset
+    nbytes: int
+    arena_off: int      # byte offset into the session arena
+    t_arrival: float    # time.perf_counter() at read completion
+
+
 class BufferReaderSet:
     """The buffer-chare collective for one read session."""
 
@@ -158,6 +177,14 @@ class BufferReaderSet:
         # streamed (per-splinter) host→device path would see; consumed by
         # the device-ingest index-map construction (data/packing.py).
         self._arrival: List[int] = []
+        # Per-splinter completion stream: recorded events (for subscriber
+        # replay) + live subscribers. ``_stream_lock`` serializes deliveries
+        # so each subscriber sees events exactly once, in arrival order, and
+        # ``unsubscribe`` is a barrier (no callback runs after it returns).
+        self._events: List[SplinterEvent] = []
+        self._subs: Dict[int, Callable[[SplinterEvent], None]] = {}
+        self._next_sub = 0
+        self._stream_lock = threading.Lock()
         self._waiters_by_splinter: Dict[int, List[_Waiter]] = {}
         # per-reader deque of unread splinters (lists popped from index 0 /
         # stolen from the end)
@@ -281,16 +308,32 @@ class BufferReaderSet:
 
     def _mark_done(self, sp: Splinter) -> None:
         to_fire: List[Callable[[], None]] = []
-        with self._lock:
-            self._done[sp.index] = True
-            self._ndone += 1
-            self._arrival.append(sp.index)
-            if self._ndone == len(self._done):
-                self._complete_evt.set()
-            for w in self._waiters_by_splinter.pop(sp.index, ()):  # type: ignore[arg-type]
-                w.remaining -= 1
-                if w.remaining == 0:
-                    to_fire.append(w.fire)
+        ev = SplinterEvent(
+            index=sp.index,
+            reader=sp.reader,
+            offset=sp.offset,
+            nbytes=sp.nbytes,
+            arena_off=sp.offset - self._base,
+            t_arrival=time.perf_counter(),
+        )
+        # _stream_lock spans the record + delivery so concurrent completions
+        # reach every subscriber in the same order they enter ``_events``
+        # (== ``_arrival`` order).
+        with self._stream_lock:
+            with self._lock:
+                self._done[sp.index] = True
+                self._ndone += 1
+                self._arrival.append(sp.index)
+                self._events.append(ev)
+                if self._ndone == len(self._done):
+                    self._complete_evt.set()
+                for w in self._waiters_by_splinter.pop(sp.index, ()):  # type: ignore[arg-type]
+                    w.remaining -= 1
+                    if w.remaining == 0:
+                        to_fire.append(w.fire)
+                subs = list(self._subs.values()) if self._subs else ()
+            for cb in subs:
+                cb(ev)
         if not to_fire:
             return
         # One splinter can release many waiters; batch their enqueues into a
@@ -298,6 +341,42 @@ class BufferReaderSet:
         with self.sched.batch():
             for fire in to_fire:
                 fire()
+
+    # -- splinter completion stream -------------------------------------------
+    def subscribe(
+        self, cb: Callable[[SplinterEvent], None], replay: bool = True
+    ) -> int:
+        """Register ``cb`` for per-splinter completion events; returns a token.
+
+        ``cb`` runs on the completing I/O thread and must be cheap (enqueue a
+        scheduler task — the split-phase rule) and must not call
+        ``subscribe``/``unsubscribe`` inline (delivery holds the stream lock).
+        With ``replay=True`` (default), splinters that completed before the
+        subscription are delivered first, in arrival order, before any new
+        event — a subscriber attached mid-session misses nothing.
+        """
+        with self._stream_lock:
+            with self._lock:
+                token = self._next_sub
+                self._next_sub += 1
+                past = list(self._events) if replay else []
+                self._subs[token] = cb
+            for ev in past:
+                cb(ev)
+        return token
+
+    def unsubscribe(self, token: int) -> None:
+        """Remove a stream subscriber. Barrier semantics: once this returns,
+        the callback will not be invoked again (any in-flight delivery has
+        completed — both paths hold the stream lock)."""
+        with self._stream_lock:
+            with self._lock:
+                self._subs.pop(token, None)
+
+    def events(self) -> Tuple[SplinterEvent, ...]:
+        """Snapshot of recorded completion events (arrival order)."""
+        with self._lock:
+            return tuple(self._events)
 
     # -- client-facing --------------------------------------------------------
     def when_available(

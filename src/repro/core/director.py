@@ -20,7 +20,7 @@ from repro.core.futures import CkCallback
 from repro.core.placement import place_readers
 from repro.core.scheduler import TaskScheduler
 from repro.core.session import FileHandle, FileOptions, Session
-from repro.core.autotune import suggest_num_readers
+from repro.core.autotune import AutoTuner, SplinterSizer, suggest_num_readers
 from repro.io.layout import plan_session
 from repro.io.posix import PosixFile
 
@@ -55,6 +55,13 @@ class Director:
         self.sessions: Dict[int, Session] = {}
         # optional global sequencing: serialize session *starts* per group key
         self._sequence_lock = threading.Lock()
+        # One observation path for every knob controller: close_session feeds
+        # each finished session's metrics to all of these (autotune §VI-A +
+        # the streaming splinter-size controller). Extend by appending.
+        self.tuner = AutoTuner(num_pes=sched.num_pes, num_nodes=sched.num_nodes)
+        self.splinter_sizer = SplinterSizer()
+        self._observers = [self.tuner.record_session,
+                           self.splinter_sizer.record_session]
 
     # -- files ---------------------------------------------------------------
     def open_file(
@@ -100,8 +107,14 @@ class Director:
                 # Global coordination (paper §III-C.1): serialize the greedy
                 # read kick-off of concurrent sessions on distinct files.
                 self._sequence_lock.acquire()
+            splinter_bytes = opts.splinter_bytes
+            if opts.adaptive_splinters:
+                # Dynamic sizing: observed per-reader throughput (large on
+                # streaming stripes) shrunk by steal pressure (small near
+                # stolen tails); opts.splinter_bytes seeds the first session.
+                splinter_bytes = self.splinter_sizer.suggest(splinter_bytes)
             plan = plan_session(
-                offset, nbytes, num_readers, splinter_bytes=opts.splinter_bytes
+                offset, nbytes, num_readers, splinter_bytes=splinter_bytes
             )
             reader_pes = place_readers(
                 opts.placement, plan.num_readers, self.sched, consumer_pes
@@ -149,6 +162,11 @@ class Director:
 
     def close_session(self, session: Session, after: CkCallback) -> None:
         def do_close() -> None:
+            # Feed the controllers before tearing the session down (the
+            # shared observation path: AutoTuner + SplinterSizer + any
+            # later-registered observer see identical metrics).
+            for observe in self._observers:
+                observe(session.metrics)
             session.readers.cancel()
             # Enforce the borrowed-view contract: views handed out by
             # read(dest=None) die with the session.

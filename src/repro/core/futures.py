@@ -35,13 +35,21 @@ class CkCallback:
         pe: Optional[int] = None,
         proxy: Optional["VirtualProxy"] = None,
         inline: bool = False,
+        drop_stale: bool = False,
     ):
         if sum(x is not None for x in (pe, proxy)) + int(inline) != 1:
             raise ValueError("exactly one of pe=, proxy=, inline=True required")
+        if drop_stale and proxy is None:
+            raise ValueError("drop_stale requires proxy routing")
         self.fn = fn
         self.pe = pe
         self.proxy = proxy
         self.inline = inline
+        # Proxy-routed only: a deregistered target drops the delivery
+        # (counted) instead of falling back to the home PE — the contract
+        # for streamed splinter events, which must never chase a retired
+        # consumer onto a reused slot.
+        self.drop_stale = drop_stale
 
     def send(self, sched: TaskScheduler, *args: Any) -> None:
         """Deliver the callback (enqueue, never call inline unless asked)."""
@@ -50,8 +58,14 @@ class CkCallback:
             return
         if self.proxy is not None:
             # Late-bound: route to wherever the chare lives *now* (home-PE
-            # fallback if it was deregistered by an elastic shrink mid-read).
-            pe = self.proxy.delivery_pe()
+            # fallback — or a counted drop for drop_stale callbacks — if it
+            # was deregistered by an elastic shrink mid-read).
+            if self.drop_stale:
+                pe = self.proxy.delivery_pe_or_drop()
+                if pe is None:
+                    return
+            else:
+                pe = self.proxy.delivery_pe()
             sched.enqueue(pe, self.fn, *args, label="cb@proxy")
         else:
             sched.enqueue(self.pe, self.fn, *args, label="cb@pe")

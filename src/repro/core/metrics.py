@@ -130,6 +130,123 @@ class SessionMetrics:
 
 
 @dataclass
+class StreamMetrics:
+    """Per-pipeline streamed-staging accounting (the overlap proof).
+
+    The streaming delivery path ships splinter groups host→device *while the
+    session's reads are still in flight*; these counters exist so benchmarks
+    and tests can prove the overlap instead of assuming it:
+
+    * ``stage_latency_s`` / ``max_stage_latency_s`` — per-splinter
+      arrival→staged latency (read completion to the end of the ``device_put``
+      that shipped it);
+    * ``inflight_bytes_hwm`` — high-water mark of bytes handed to
+      ``device_put`` whose transfers have not been awaited yet (the staging
+      budget's observable);
+    * overlap fraction — per step, the staging span (first chunk's
+      ``device_put`` start → last chunk's end) is intersected with the read
+      span (session start → last byte read); the summed intersection over the
+      summed step wall time is ``overlap_fraction()``. The whole-window path
+      stages strictly after the last read, so it scores 0 by construction;
+      a streaming run whose staging rides inside the read window approaches
+      the read span / step time ratio.
+    * ``stale_events`` — late splinter events dropped because their step was
+      already finalized/retired (e.g. delivery racing ``resize()``).
+    """
+
+    lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    splinters_staged: int = 0
+    bytes_staged: int = 0
+    stage_chunks: int = 0             # device_put calls issued by the stager
+    stage_time_s: float = 0.0         # summed wall time inside device_put
+    stage_latency_s: float = 0.0      # summed arrival->staged latency
+    max_stage_latency_s: float = 0.0
+    inflight_bytes: int = 0
+    inflight_bytes_hwm: int = 0
+    stale_events: int = 0
+    steps: int = 0
+    overlap_s: float = 0.0            # read-span ∩ stage-span, summed
+    step_time_s: float = 0.0
+    read_time_s: float = 0.0          # summed read spans (denominator cap)
+
+    def record_chunk(
+        self, nbytes: int, nsplinters: int, dt: float, latencies_s: List[float]
+    ) -> None:
+        with self.lock:
+            self.stage_chunks += 1
+            self.splinters_staged += nsplinters
+            self.bytes_staged += nbytes
+            self.stage_time_s += dt
+            for lat in latencies_s:
+                self.stage_latency_s += lat
+                if lat > self.max_stage_latency_s:
+                    self.max_stage_latency_s = lat
+
+    def stage_inflight(self, delta_bytes: int) -> None:
+        """Track bytes staged-but-not-awaited (+ on device_put, - on wait)."""
+        with self.lock:
+            self.inflight_bytes += delta_bytes
+            if self.inflight_bytes > self.inflight_bytes_hwm:
+                self.inflight_bytes_hwm = self.inflight_bytes
+
+    def record_stale_event(self) -> None:
+        with self.lock:
+            self.stale_events += 1
+
+    def record_step(
+        self,
+        read_span: "tuple[float, float]",
+        stage_span: "tuple[float, float]",
+        step_time_s: float,
+    ) -> None:
+        """Fold one step's spans into the overlap accounting.
+
+        Spans are absolute ``perf_counter`` intervals; the concurrent time is
+        their intersection, clamped to the step wall time (prefetched steps
+        can have spans that predate the step's own wall interval)."""
+        r0, r1 = read_span
+        s0, s1 = stage_span
+        ov = max(0.0, min(r1, s1) - max(r0, s0))
+        with self.lock:
+            self.steps += 1
+            self.step_time_s += max(step_time_s, 0.0)
+            self.read_time_s += max(r1 - r0, 0.0)
+            self.overlap_s += min(ov, max(step_time_s, 0.0))
+
+    # -- derived -------------------------------------------------------------
+    def overlap_fraction(self) -> float:
+        """Concurrent read+staging time / total step time (0 when no steps)."""
+        with self.lock:
+            return self.overlap_s / self.step_time_s if self.step_time_s else 0.0
+
+    def mean_stage_latency_s(self) -> float:
+        with self.lock:
+            return (self.stage_latency_s / self.splinters_staged
+                    if self.splinters_staged else 0.0)
+
+    def summary(self) -> Dict[str, float]:
+        with self.lock:
+            frac = self.overlap_s / self.step_time_s if self.step_time_s else 0.0
+            mean_lat = (self.stage_latency_s / self.splinters_staged
+                        if self.splinters_staged else 0.0)
+            return {
+                "splinters_staged": float(self.splinters_staged),
+                "bytes_staged": float(self.bytes_staged),
+                "stage_chunks": float(self.stage_chunks),
+                "stage_time_s": self.stage_time_s,
+                "mean_stage_latency_s": mean_lat,
+                "max_stage_latency_s": self.max_stage_latency_s,
+                "inflight_bytes_hwm": float(self.inflight_bytes_hwm),
+                "stale_events": float(self.stale_events),
+                "steps": float(self.steps),
+                "overlap_s": self.overlap_s,
+                "step_time_s": self.step_time_s,
+                "read_time_s": self.read_time_s,
+                "overlap_fraction": frac,
+            }
+
+
+@dataclass
 class IngestMetrics:
     """Per-pipeline step-ingest accounting (host vs device reassembly).
 

@@ -64,6 +64,13 @@ class LocationManager:
         with self._lock:
             return len(self._where)
 
+    def count_stale(self) -> None:
+        """Fold an externally-detected stale delivery into the counter (a
+        streamed splinter event reaching a step that already finalized —
+        same observability channel as the routing-level drops)."""
+        with self._lock:
+            self.stale_deliveries += 1
+
     def lookup(self, vid: int) -> int:
         with self._lock:
             return self._where[vid]
@@ -78,6 +85,23 @@ class LocationManager:
             if pe is None:
                 self.stale_deliveries += 1
                 return 0
+            return pe
+
+    def lookup_or_drop(self, vid: int) -> Optional[int]:
+        """PE for delivery, or ``None`` when the id has been deregistered.
+
+        The drop-capable variant of ``lookup_or_home`` for *streamed splinter
+        deliveries*: a request completion racing an elastic shrink must land
+        somewhere (home PE — the data was asked for), but a splinter event
+        addressed to a retired consumer must be **dropped**, never rerouted —
+        rerouting could deliver it to a consumer slot reused by a later
+        ``resize()`` grow, staging the same bytes twice. Drops are counted in
+        ``stale_deliveries`` alongside the home-PE fallbacks."""
+        with self._lock:
+            pe = self._where.get(vid)
+            if pe is None:
+                self.stale_deliveries += 1
+                return None
             return pe
 
     def proxy(self, vid: int) -> "VirtualProxy":
@@ -99,6 +123,10 @@ class VirtualProxy:
     def delivery_pe(self) -> int:
         """Current PE, falling back to the home PE for deregistered ids."""
         return self.loc.lookup_or_home(self.vid)
+
+    def delivery_pe_or_drop(self) -> Optional[int]:
+        """Current PE, or ``None`` (drop, counted) for deregistered ids."""
+        return self.loc.lookup_or_drop(self.vid)
 
     def current_node(self) -> int:
         return self.loc.sched.node_of(self.current_pe())
@@ -131,7 +159,13 @@ class Client:
         """Drop this client from the location table (idempotent)."""
         self.loc.deregister(self.vid)
 
-    def callback(self, fn: Callable) -> "CkCallback":
+    def callback(self, fn: Callable, drop_stale: bool = False) -> "CkCallback":
+        """Continuation routed through the virtual proxy.
+
+        ``drop_stale=True`` selects drop-and-count delivery for retired ids
+        (streamed splinter events) instead of the home-PE fallback (request
+        completions) — see ``LocationManager.lookup_or_drop``."""
         from repro.core.futures import CkCallback
 
-        return CkCallback(fn, proxy=self.loc.proxy(self.vid))
+        return CkCallback(fn, proxy=self.loc.proxy(self.vid),
+                          drop_stale=drop_stale)

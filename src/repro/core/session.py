@@ -16,6 +16,11 @@ class FileOptions:
 
     num_readers: Optional[int] = None       # None → autotuned (§VI-A)
     splinter_bytes: int = 8 * 1024 * 1024
+    # Dynamic splinter sizing: when True, each new session's splinter size is
+    # chosen by the Director's SplinterSizer from observed per-reader
+    # throughput and steal pressure (core/autotune.py); ``splinter_bytes``
+    # then only seeds the first session (no observations yet).
+    adaptive_splinters: bool = False
     work_stealing: bool = True
     max_io_threads: int = 64
     placement: str = "node_spread"          # see core/placement.py
@@ -82,3 +87,16 @@ class Session:
     def arrival_order(self):
         """Splinter completion order (see BufferReaderSet.arrival_order)."""
         return self.readers.arrival_order()
+
+    # -- streaming ------------------------------------------------------------
+    def subscribe_splinters(self, cb, replay: bool = True) -> int:
+        """Per-splinter completion stream (see BufferReaderSet.subscribe)."""
+        return self.readers.subscribe(cb, replay=replay)
+
+    def unsubscribe_splinters(self, token: int) -> None:
+        self.readers.unsubscribe(token)
+
+    @property
+    def splinter_events(self):
+        """Recorded completion events so far (arrival order snapshot)."""
+        return self.readers.events()

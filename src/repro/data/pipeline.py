@@ -37,6 +37,45 @@ cheapest). Per step, host code touches file *metadata* only; the
 (With ``zero_copy=False`` the session→step-arena copy still happens and is
 counted as host bytes — only the zero-copy default earns the 0.)
 
+Streamed staging (``streaming=True``)
+-------------------------------------
+With ``streaming=True`` the device path goes **event-driven**: the pipeline
+subscribes to each step session's per-splinter completion stream
+(``CkIO.read_stream``) and ships splinters host→device *as they arrive* —
+**one ``device_put`` per splinter** (uniform splinter sizes keep the chunk
+shapes, and with them the fused consume executable's signature, stable
+across steps and arrival permutations; ``h2d_transfers`` advances once per
+splinter). ``stage_chunk_bytes`` only batches event-task wakeups: staging
+work runs once at least that many bytes are pending (0 = ship on every
+event). Transfers respect a bounded in-flight budget
+(``max_inflight_stage_bytes``: before exceeding it, the oldest outstanding
+transfer — from whichever step stream issued it — is awaited).
+``get_batch_device`` then only stages the tail and
+reassembles **on device** in one fused dispatch: the arrival-order→
+file-order permutation is applied to the chunk *handles* (each splinter is
+its own device buffer, so reordering the argument list is free host
+metadata work), and ``ops.ingest_chunks_window`` fuses the concatenate with
+the batch-major window kernel. A contiguous arrival-ordered staging buffer
+— the multi-host/TPU layout — keeps its on-device gather path:
+``ops.ingest_chunks_block`` / ``ops.device_ingest`` over the
+``data/packing.py`` index maps. Reads for step N+1, H2D staging for step N's tail,
+and compute on step N-1 genuinely overlap; ``StreamMetrics``
+(``pipe.stream``) proves it — per-splinter arrival→staged latency,
+in-flight high-water mark, and the overlap fraction. ``host_permute_bytes``
+stays 0 (every staged byte goes straight from the session arena into
+``device_put``); ``h2d_transfers`` counts one per chunk. Completeness never
+depends on the stream: splinters whose events were dropped (a delivery
+racing ``resize()`` — dropped and counted, never rerouted to a reused
+consumer slot) are staged from the authoritative event log at finalize.
+Batches are bit-identical to the ``streaming=False`` whole-window path.
+A per-call ``sharding`` forces that call onto the whole-window path
+(streamed chunks are placed before the call-site sharding is known).
+Note on ``FileOptions(adaptive_splinters=True)``: each splinter-size
+change changes the chunk count/shape signature and retraces the fused
+consume executable once; the sizer EMA-smooths and 256 KiB-quantizes its
+suggestions so sizes converge after the first few sessions, but a
+latency-critical run should pin ``splinter_bytes`` statically.
+
 Lifetime rules:
   * the returned ``(inputs, labels)`` are ordinary JAX device arrays — they
     own their storage and stay valid as long as the caller holds them;
@@ -46,6 +85,13 @@ Lifetime rules:
     its host references and retires the session — any access to the old
     borrowed view afterwards raises ``ValueError`` (never a silent read of
     recycled arena memory);
+  * **streamed chunk views**: each staged chunk's borrowed arena view is
+    pinned from the moment it is handed to ``device_put`` (mid-read, while
+    the session is still filling) until its step retires — i.e. valid until
+    staged, then until the next ``get_batch*``/``close`` call, at which
+    point the pipeline blocks on the step's transfers and releases every
+    chunk view along with the session (same use-after-retire ``ValueError``
+    guarantee);
   * host-path ``get_batch`` keeps its PR-1 contract: the returned arrays
     alias the session arena and are valid until the next
     ``get_batch*``/``close`` call.
@@ -53,16 +99,35 @@ Lifetime rules:
 from __future__ import annotations
 
 import threading
+import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import CkIO, Client, FileOptions, Session
+from repro.core.buffers import SplinterEvent
 from repro.core.futures import CkCallback, CkFuture
-from repro.core.metrics import IngestMetrics
+from repro.core.metrics import IngestMetrics, StreamMetrics
 from repro.data.packing import batch_from_tokens, window_rows
 from repro.data.tokenfile import read_meta
+
+
+@dataclass
+class _StreamState:
+    """Per-step streamed-staging state (``streaming=True`` device path)."""
+
+    session: Optional[Session] = None
+    token: Optional[int] = None            # read_stream subscription token
+    pending: List[SplinterEvent] = field(default_factory=list)
+    events: List[SplinterEvent] = field(default_factory=list)  # staged order
+    chunks: List[object] = field(default_factory=list)         # device arrays
+    chunk_hosts: List[tuple] = field(default_factory=list)     # (np, view)
+    t_first_stage: float = 0.0
+    t_last_stage: float = 0.0
+    stagers: int = 0                       # _stage_group calls in flight
+    retired: bool = False
 
 
 @dataclass
@@ -74,6 +139,7 @@ class _StepBuffer:
     session: Optional[Session] = None
     arena: Optional[np.ndarray] = None
     outstanding: int = 0
+    stream: Optional[_StreamState] = None
     ready: CkFuture = field(default_factory=CkFuture)
 
 
@@ -83,7 +149,7 @@ class _StagedStep:
     docstring lifetime rules): released by the next ``get_batch*``."""
 
     staged: object                     # jax.Array (whole-window tokens)
-    host_tokens: Optional[np.ndarray]  # np view aliasing the arena
+    host_tokens: object                # np view(s) aliasing the arena
     host_view: Optional[memoryview]    # the borrowed arena view
 
 
@@ -104,6 +170,9 @@ class CkIOPipeline:
         start_step: int = 0,
         drop_remainder: bool = True,
         zero_copy: bool = True,
+        streaming: bool = False,
+        stage_chunk_bytes: int = 0,
+        max_inflight_stage_bytes: int = 32 << 20,
         pad_id: int = 0,
     ):
         self.meta = read_meta(path)
@@ -129,11 +198,39 @@ class CkIOPipeline:
             for i in range(self.num_consumers)
         ]
         self.zero_copy = zero_copy
+        if streaming and not zero_copy:
+            raise ValueError(
+                "streaming=True stages borrowed arena views and requires "
+                "zero_copy=True")
+        if streaming and self.file_opts.splinter_bytes % self.meta.itemsize:
+            # Fail fast: streamed staging views each splinter's bytes as
+            # whole tokens; a misaligned size would otherwise surface as an
+            # opaque np.frombuffer error inside a scheduler task. (The
+            # whole-window path views the full window and doesn't care.)
+            raise ValueError(
+                f"streaming=True requires splinter_bytes "
+                f"({self.file_opts.splinter_bytes}) to be a multiple of the "
+                f"token itemsize ({self.meta.itemsize})")
+        self.streaming = streaming
+        # 0 (default) ships every splinter the moment its event lands —
+        # maximum overlap; a larger threshold batches pending arrivals into
+        # fewer staging tasks (the tail is always shipped at finalize).
+        self.stage_chunk_bytes = max(1, stage_chunk_bytes)
+        self.max_inflight_stage_bytes = max(
+            self.stage_chunk_bytes, max_inflight_stage_bytes)
         self.ingest = IngestMetrics()
+        self.stream = StreamMetrics()
+        self._t_last_step = time.perf_counter()
         self._bufs: Dict[int, _StepBuffer] = {}
         self._retired: List[Session] = []   # zero-copy sessions pending close
         self._staged: List[_StagedStep] = []  # device steps pending release
-        self._lock = threading.Lock()
+        # Staged-but-not-awaited transfers across *all* step streams
+        # (st, chunk, nbytes): the in-flight budget is global (prefetched
+        # steps stage concurrently), so eviction must be too.
+        self._stage_outstanding: Deque[tuple] = deque()
+        # Condition, not bare Lock: _finalize_stream waits on it for
+        # concurrent _stage_group calls (multi-threaded pumps) to drain.
+        self._lock = threading.Condition()
         self._next_step = start_step
         for s in range(start_step, min(start_step + self.prefetch_depth, self.num_steps)):
             self.start_step(s)
@@ -159,6 +256,21 @@ class CkIOPipeline:
     def migrate_consumer(self, idx: int, new_pe: int) -> None:
         self.consumers[idx].migrate(new_pe)
 
+    def reset_stream_metrics(self) -> StreamMetrics:
+        """Open a fresh ``StreamMetrics`` window (e.g. after benchmark
+        warmup) and return the old one. The in-flight balance carries over:
+        transfers already issued by subscribed prefetch streams will retire
+        against the new object, so a plain ``pipe.stream = StreamMetrics()``
+        swap would drive its ``inflight_bytes`` negative and understate the
+        high-water mark. Also restarts the step-time clock."""
+        with self._lock:
+            old, new = self.stream, StreamMetrics()
+            new.inflight_bytes = old.inflight_bytes
+            new.inflight_bytes_hwm = old.inflight_bytes
+            self.stream = new
+            self._t_last_step = time.perf_counter()
+        return old
+
     # -- split-phase step input --------------------------------------------------
     def start_step(self, step: int) -> None:
         """Kick off the read session + consumer reads for ``step`` (async)."""
@@ -180,6 +292,25 @@ class CkIOPipeline:
 
         def on_session(session: Session) -> None:
             buf.session = session
+            if self.streaming:
+                # Event-driven mode: the splinter stream drives staging, and
+                # completeness is one whole-window residency waiter — not a
+                # per-consumer read fan-out (the last read releases a single
+                # completion task instead of num_consumers of them; the
+                # consumers still own the *event* routing, so migration and
+                # drop-stale semantics are unchanged).
+                self._subscribe_stream(buf, session)
+                buf.outstanding = 1
+
+                def window_resident(_msg) -> None:
+                    with self._lock:
+                        buf.outstanding = 0
+                    buf.ready.set(buf)
+
+                self.ck.read_notify(
+                    session, nbytes, abs_off,
+                    CkCallback(window_resident, pe=0))
+                return
             # Consumers collectively read disjoint slices of the window.
             n = self.num_consumers
             per = (nbytes + n - 1) // n
@@ -233,20 +364,193 @@ class CkIOPipeline:
             consumer_pes=[c.pe for c in self.consumers],
         )
 
+    # -- streamed staging (the event-driven device path) ----------------------
+    def _subscribe_stream(self, buf: _StepBuffer, session: Session) -> None:
+        """Attach the per-splinter staging loop to ``session``'s stream."""
+        st = _StreamState(session=session)
+        buf.stream = st
+
+        def route(ev: SplinterEvent) -> Optional[Client]:
+            # Deliver each event through a consumer's virtual proxy: the
+            # staging task chases migrations, and an event addressed to a
+            # consumer retired by resize() is dropped + counted (drop-stale
+            # delivery), never rerouted to a reused slot. Copy the list —
+            # resize() mutates self.consumers in place from another thread,
+            # and this runs on the completing I/O thread (a stale Client
+            # picked from the copy is exactly the drop-stale case).
+            cons = list(self.consumers)
+            return cons[ev.index % len(cons)] if cons else None
+
+        def on_splinter(ev: SplinterEvent) -> None:
+            self._on_stream_event(buf, st, ev)
+
+        st.token = self.ck.read_stream(session, on_splinter, route=route)
+
+    def _on_stream_event(
+        self, buf: _StepBuffer, st: _StreamState, ev: SplinterEvent
+    ) -> None:
+        """Scheduler task per streamed splinter arrival: accumulate until a
+        chunk's worth of bytes is pending, then ship it."""
+        with self._lock:
+            if st.retired:
+                # Late event racing finalize/resize: drop and count — the
+                # splinter was (or will be) staged from the authoritative
+                # event log, never twice.
+                self.stream.record_stale_event()
+                self.ck.locations.count_stale()
+                return
+            st.pending.append(ev)
+            if (sum(e.nbytes for e in st.pending) < self.stage_chunk_bytes
+                    and not buf.ready.done):
+                return                 # accumulate; tail staged at finalize
+            group, st.pending = st.pending, []
+            st.stagers += 1            # claimed: finalize must wait for us
+        try:
+            self._stage_group(st, group)
+        finally:
+            with self._lock:
+                st.stagers -= 1
+                self._lock.notify_all()
+
+    def _stage_group(self, st: _StreamState, group: List[SplinterEvent]) -> None:
+        """``device_put`` a group of arrived splinters, one chunk per
+        splinter, respecting the in-flight staging budget. Runs on the
+        pumping thread — while reader threads are still filling the rest of
+        the session.
+
+        One chunk per splinter is deliberate: splinter sizes within a plan
+        are uniform (modulo stripe tails), so the staged chunk *shapes* —
+        and with them the device concatenate/gather signatures — are stable
+        across steps and arrival permutations, keeping every step on cached
+        executables. Coalescing arrival runs would produce arrival-dependent
+        chunk shapes and recompile the consume path each step."""
+        import jax
+
+        if not group:
+            return
+        sess = st.session
+        assert sess is not None
+        for ev in group:
+            # Bounded in-flight budget: make room by awaiting the oldest
+            # outstanding transfer(s) — from whichever step stream issued
+            # them — before issuing another one.
+            while True:
+                with self._lock:
+                    if (self.stream.inflight_bytes + ev.nbytes
+                            <= self.max_inflight_stage_bytes
+                            or not self._stage_outstanding):
+                        break
+                    _, old_chunk, old_n = self._stage_outstanding.popleft()
+                old_chunk.block_until_ready()
+                self.stream.stage_inflight(-old_n)
+            view = sess.readers.borrow_view(ev.offset, ev.nbytes)
+            tokens = np.frombuffer(view, dtype=self.meta.dtype)
+            if tokens.dtype == np.uint32:
+                tokens = tokens.view(np.int32)
+            t0 = time.perf_counter()
+            self.stream.stage_inflight(ev.nbytes)
+            try:
+                chunk = jax.device_put(tokens)
+            except BaseException:
+                # A failed transfer never reaches _stage_outstanding, so
+                # its budget charge must be rolled back here or
+                # inflight_bytes stays inflated for the pipeline's life.
+                self.stream.stage_inflight(-ev.nbytes)
+                raise
+            t1 = time.perf_counter()
+            if st.t_first_stage == 0.0:
+                st.t_first_stage = t0
+            st.t_last_stage = t1
+            with self._lock:
+                st.chunks.append(chunk)
+                st.chunk_hosts.append((tokens, view))
+                st.events.append(ev)
+                self._stage_outstanding.append((st, chunk, ev.nbytes))
+            self.stream.record_chunk(
+                ev.nbytes, 1, t1 - t0, [t1 - ev.t_arrival])
+
+    def _finalize_stream(self, buf: _StepBuffer):
+        """All reads are resident (``buf.ready``): stop the stream, stage the
+        pending tail plus any splinters whose events were dropped, and return
+        the arrival-order device chunks + their piece layout."""
+        st = buf.stream
+        assert st is not None and st.session is not None
+        sess = st.session
+        # No pipeline lock held here: end_stream takes the reader stream
+        # lock (lock order is stream lock -> pipeline lock, never inverse).
+        self.ck.end_stream(sess, st.token)
+        with self._lock:
+            # Retire FIRST: event tasks popped concurrently by another
+            # pumping thread from here on drop + count instead of staging —
+            # otherwise one could race the missing-scan below and stage its
+            # splinter twice. Then drain stagers that already claimed a
+            # group before the flip (their chunks must be in st.events
+            # before the scan).
+            st.retired = True
+            group, st.pending = st.pending, []
+            while st.stagers:
+                self._lock.wait()
+        self._stage_group(st, group)
+        # Completeness: any splinter not staged (its event was dropped by
+        # drop-stale routing mid-resize, or raced the retire flip) comes
+        # from the authoritative event log — the session is complete, so
+        # the log is too.
+        with self._lock:
+            seen = {e.index for e in st.events}
+        missing = [ev for ev in sess.splinter_events if ev.index not in seen]
+        self._stage_group(st, missing)
+        with self._lock:
+            own = [e for e in self._stage_outstanding if e[0] is st]
+            self._stage_outstanding = deque(
+                e for e in self._stage_outstanding if e[0] is not st)
+        # The consuming gather forces every chunk; this stream's transfers
+        # leave the in-flight budget (other steps' streams keep theirs).
+        self.stream.stage_inflight(-sum(n for _, _, n in own))
+        pieces = [(e.offset, e.nbytes) for e in st.events]
+        return list(st.chunks), pieces, st
+
+    def _abort_stream(self, buf: _StepBuffer) -> None:
+        """Tear down a step's stream without consuming it (host-path fetch,
+        per-call sharding override, or pipeline close)."""
+        st = buf.stream
+        if st is None:
+            return
+        buf.stream = None
+        if st.session is not None and st.token is not None:
+            self.ck.end_stream(st.session, st.token)
+        with self._lock:
+            st.retired = True
+            st.pending = []
+            while st.stagers:          # drain in-flight _stage_group calls
+                self._lock.wait()
+            chunks, st.chunks = list(st.chunks), []
+            st.chunk_hosts = []
+            own = [e for e in self._stage_outstanding if e[0] is st]
+            self._stage_outstanding = deque(
+                e for e in self._stage_outstanding if e[0] is not st)
+        for chunk in chunks:
+            # The arena must outlive the transfers; block before the chunk
+            # views can be invalidated by the session retiring.
+            chunk.block_until_ready()
+        self.stream.stage_inflight(-sum(n for _, _, n in own))
+
     def _close_retired(self) -> None:
         with self._lock:
             retired, self._retired = self._retired, []
             staged, self._staged = self._staged, []
+        if staged:
+            import jax
         for st in staged:
-            # The step's one host→device transfer may still be in flight;
-            # the arena (and our host refs) must outlive it. Block, then
-            # drop the references so the borrow can actually be released.
-            # A failed transfer propagates (the device array is unusable
-            # and silence would let ingest counters claim success); the
-            # host refs are dropped either way — a failed transfer does
-            # not need the arena.
+            # The step's host→device transfer(s) may still be in flight;
+            # the arena (and our host refs) must outlive them. Block, then
+            # drop the references so the borrow(s) can actually be released.
+            # (Streamed steps pin their outputs — blocking those forces
+            # every chunk transfer they consumed.) A failed transfer
+            # propagates (the device array is unusable and silence would
+            # let ingest counters claim success); the host refs are dropped
+            # either way — a failed transfer does not need the arena.
             try:
-                st.staged.block_until_ready()
+                jax.block_until_ready(st.staged)
             finally:
                 st.host_tokens = None
                 st.staged = None
@@ -273,6 +577,10 @@ class CkIOPipeline:
     def _window_tokens(self, buf: _StepBuffer):
         """Whole-window tokens (and the borrowed arena view backing them,
         zero-copy mode only). Retires the *previous* step first."""
+        if buf.stream is not None:
+            # Host-path / whole-window fetch of a streamed step: the stream
+            # state is torn down first (its chunks are never consumed).
+            self._abort_stream(buf)
         view: Optional[memoryview] = None
         if self.zero_copy:
             # Previous step's batch has been consumed by now — retire its
@@ -308,6 +616,7 @@ class CkIOPipeline:
         # Host-side phase-2 permutation: the window passes through host
         # reshaping/marshalling on its way to the device.
         self.ingest.record_host_step(buf.nbytes)
+        self._t_last_step = time.perf_counter()
         return inputs, labels
 
     def get_batch_device(
@@ -325,12 +634,20 @@ class CkIOPipeline:
         See the module docstring for the staged-buffer lifetime contract.
         ``sharding`` is forwarded to ``device_put`` for the staged window;
         ``use_pallas`` picks the gather backend (default: Pallas on TPU,
-        XLA reference elsewhere)."""
+        XLA reference elsewhere).
+
+        With ``streaming=True`` (and no per-call ``sharding``), the window
+        was being staged chunk-by-chunk while its reads were in flight; this
+        call only ships the tail, concatenates on device, and runs the
+        arrival-order gather — see "Streamed staging" in the module
+        docstring."""
         import jax
 
         from repro.kernels import ops
 
         buf = self._wait_step(step, timeout)
+        if buf.stream is not None and sharding is None:
+            return self._get_batch_device_streamed(buf, use_pallas=use_pallas)
         tokens, view = self._window_tokens(buf)
         itemsize = self.meta.itemsize
         valid_tokens = buf.nbytes // itemsize
@@ -359,6 +676,71 @@ class CkIOPipeline:
         # staging; only the zero-copy path truly has 0 host bytes.
         self.ingest.record_device_step(
             buf.nbytes, host_bytes=0 if self.zero_copy else buf.nbytes)
+        self._t_last_step = time.perf_counter()
+        return inputs, labels
+
+    def _get_batch_device_streamed(
+        self, buf: _StepBuffer, *, use_pallas: Optional[bool] = None
+    ):
+        """Streamed tail of ``get_batch_device``: finalize the step's chunk
+        stream and reassemble on device in a single fused dispatch (concat +
+        window kernel over file-order-sorted chunk handles)."""
+        from repro.kernels import ops
+
+        self._close_retired()          # release the previous step's refs
+        chunks, pieces, st = self._finalize_stream(buf)
+        sess = st.session
+        itemsize = self.meta.itemsize
+        valid_tokens = buf.nbytes // itemsize
+        abs_off = buf.abs_off
+        # The arrival-order→file-order permutation is applied to the chunk
+        # *handles*: each splinter is its own device buffer, so reordering
+        # the argument list (host metadata, O(#splinters log #splinters))
+        # replaces the on-device gather a contiguous arrival-ordered staging
+        # buffer would need (ops.ingest_chunks_block / device_ingest serve
+        # that layout). Sorted order is also deterministic per plan, so the
+        # fused executable's chunk-shape signature is identical across steps
+        # whatever order the reads completed in.
+        order = sorted(range(len(pieces)), key=lambda i: pieces[i][0])
+        pieces = [pieces[i] for i in order]
+        chunks = [chunks[i] for i in order]
+        pos = abs_off
+        for off, nb in pieces:        # exactly-once coverage, cheap to prove
+            if off != pos:
+                raise RuntimeError(
+                    f"streamed pieces corrupt: expected offset {pos}, "
+                    f"got {off}")
+            pos += nb
+        if pos != abs_off + buf.nbytes:
+            raise RuntimeError("streamed pieces do not cover the window")
+        inputs, labels = ops.ingest_chunks_window(
+            chunks, global_batch=self.global_batch, seq_len=self.seq_len,
+            valid_limit=valid_tokens, pad_id=self.pad_id,
+            use_pallas=use_pallas)
+        with self._lock:
+            self._retired.append(sess)
+            # Pin the chunk views + outputs until the next step: the
+            # streamed analog of the whole-window staged refs (module
+            # docstring, "streamed chunk views"); blocking on the outputs
+            # forces every chunk transfer they consumed.
+            self._staged.append(_StagedStep(
+                staged=(inputs, labels),
+                host_tokens=st.chunk_hosts,
+                host_view=None,
+            ))
+            nchunks = len(st.chunks)
+            st.chunks = []
+            st.chunk_hosts = []
+        buf.stream = None
+        self.ingest.record_device_step(
+            buf.nbytes, transfers=nchunks, host_bytes=0)
+        now = time.perf_counter()
+        self.stream.record_step(
+            (sess.metrics.t_start, sess.metrics.t_last_read),
+            (st.t_first_stage, st.t_last_stage),
+            now - self._t_last_step,
+        )
+        self._t_last_step = now
         return inputs, labels
 
     def idle(self, seconds: float) -> int:
@@ -383,12 +765,19 @@ class CkIOPipeline:
         return jax.device_put(inputs, sharding), jax.device_put(labels, sharding)
 
     def close(self) -> None:
-        self._close_retired()
-        # Flush queued session starts, then join every reader thread of this
-        # file before the fd goes away — an in-flight prefetch session must
-        # not pread a closed file (shutdown is off the hot path; the pump
-        # here is what makes close deterministic).
+        # Flush queued session starts BEFORE tearing down streams: a
+        # prefetch session that only starts during this pump subscribes its
+        # splinter stream then (and may stage chunks) — aborting first
+        # would miss it and leak its in-flight accounting. The pump is also
+        # what makes close deterministic: every reader thread of this file
+        # is joined below before the fd goes away (an in-flight prefetch
+        # session must not pread a closed file; shutdown is off the hot
+        # path).
         self.ck.pump()
+        for buf in list(self._bufs.values()):
+            if buf.stream is not None:
+                self._abort_stream(buf)
+        self._close_retired()
         stopped = True
         for sess in list(self.ck.director.sessions.values()):
             if sess.file is self.file:

@@ -132,6 +132,98 @@ def reassemble_tokens(
     return ref.tokens_gather_ref(staged, row_idx, pad_id=pad_id)
 
 
+def staged_concat(chunks):
+    """Concatenate streamed staging chunks into one device-resident buffer.
+
+    ``chunks`` are the per-``device_put`` token arrays the streaming stager
+    shipped in arrival order; their concatenation *is* the arrival-ordered
+    staged layout the gather index maps describe. Runs on device (XLA
+    concatenate) — no token byte returns to the host.
+    """
+    if not chunks:
+        raise ValueError("staged_concat: no chunks")
+    if len(chunks) == 1:
+        return chunks[0]
+    return jnp.concatenate(chunks)
+
+
+# -- streamed-chunk ingest (single fused dispatch per step) -------------------
+#
+# The streaming pipeline holds the step as a *list* of arrival-order chunk
+# arrays (one per splinter). Concatenating, unpermuting, and window-gathering
+# as separate eager ops would cost three executable dispatches and two
+# materialized window-size intermediates per step; these entry points fuse
+# the whole consume tail into one jit call (XLA folds the concatenate into
+# the gather), keyed on the chunk-count/shape signature — stable across
+# steps for a uniform-splinter plan, whatever the arrival permutation.
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("global_batch", "seq_len", "window_tok_off",
+                     "valid_limit", "pad_id", "use_pallas"),
+)
+def ingest_chunks_window(
+    chunks,
+    *,
+    global_batch: int,
+    seq_len: int,
+    window_tok_off: int = 0,
+    valid_limit: int | None = None,
+    pad_id: int = 0,
+    use_pallas: bool | None = None,
+):
+    """File-order chunk list -> (inputs, labels): fused concat + window."""
+    return reassemble_window(
+        staged_concat(list(chunks)), global_batch=global_batch,
+        seq_len=seq_len, window_tok_off=window_tok_off,
+        valid_limit=valid_limit, pad_id=pad_id, use_pallas=use_pallas)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("global_batch", "seq_len", "window_tok_off",
+                     "valid_limit", "pad_id", "use_pallas"),
+)
+def ingest_chunks_block(
+    chunks,
+    perm: jax.Array,              # (NB,) file-order block -> staged block
+    *,
+    global_batch: int,
+    seq_len: int,
+    window_tok_off: int = 0,
+    valid_limit: int | None = None,
+    pad_id: int = 0,
+    use_pallas: bool | None = None,
+):
+    """Uniform-block arrival-order chunks -> (inputs, labels), one dispatch:
+    concat + block unpermute + fused window reassembly."""
+    staged = staged_concat(list(chunks))
+    nb = perm.shape[0]
+    T = staged.shape[0] // nb
+    linear = reassemble(
+        staged[: nb * T].reshape(nb, T), perm, use_pallas=use_pallas
+    ).reshape(-1)
+    return reassemble_window(
+        linear, global_batch=global_batch, seq_len=seq_len,
+        window_tok_off=window_tok_off, valid_limit=valid_limit,
+        pad_id=pad_id, use_pallas=use_pallas)
+
+
+@functools.partial(jax.jit, static_argnames=("pad_id", "use_pallas"))
+def ingest_chunks_tokens(
+    chunks,
+    row_idx: jax.Array,
+    *,
+    pad_id: int = 0,
+    use_pallas: bool | None = None,
+):
+    """Non-uniform arrival-order chunks -> (inputs, labels) via the
+    token-level gather, fused with the concat."""
+    return reassemble_tokens(
+        staged_concat(list(chunks)), row_idx, pad_id=pad_id,
+        use_pallas=use_pallas)
+
+
 def device_ingest(
     staged: jax.Array,            # (L,) staged tokens on device
     gather=None,                  # np.ndarray token map or None (file order)

@@ -55,7 +55,21 @@ def main() -> None:
                     help="one device_put of the whole step window + on-device"
                          " batch reassembly (kernels/reassemble.py) instead"
                          " of host-side batch construction")
+    ap.add_argument("--streaming", action="store_true",
+                    help="event-driven splinter streaming: stage each"
+                         " splinter host->device as its read completes and"
+                         " reassemble from arrival order on device (implies"
+                         " --device-ingest; StreamMetrics in the final"
+                         " summary prove the read/staging overlap)")
+    ap.add_argument("--adaptive-splinters", action="store_true",
+                    help="size splinters per session from observed"
+                         " per-reader throughput + steal pressure"
+                         " (core/autotune.py SplinterSizer); with"
+                         " --streaming each size change retraces the fused"
+                         " ingest once until the EMA converges")
     args = ap.parse_args()
+    if args.streaming:
+        args.device_ingest = True
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -72,7 +86,9 @@ def main() -> None:
     pipe = CkIOPipeline(
         args.data, args.global_batch, args.seq,
         num_pes=4, num_consumers=args.num_consumers,
-        file_opts=FileOptions(num_readers=args.num_readers),
+        file_opts=FileOptions(num_readers=args.num_readers,
+                              adaptive_splinters=args.adaptive_splinters),
+        streaming=args.streaming,
     )
 
     # -- state -----------------------------------------------------------------
@@ -131,6 +147,7 @@ def main() -> None:
         "failures": sup.stats.failures,
         "sched_tasks": summary.sched.stats,
         "ingest": pipe.ingest.summary(),
+        "stream": pipe.stream.summary() if args.streaming else None,
     }, indent=2))
 
 

@@ -1,0 +1,638 @@
+"""Event-driven splinter streaming: completion stream semantics, fused
+chunk-ingest kernels vs the NumPy oracle (arbitrary arrival permutations,
+seeded sweeps — the test_device_ingest pattern), overlap-metrics invariants,
+mid-stream resize/migration, stale-delivery drops, adaptive splinter sizing,
+and bit-identical equivalence with the whole-window (``streaming=False``)
+path.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    AutoTuner,
+    CkIO,
+    FileOptions,
+    SessionMetrics,
+    SplinterSizer,
+    StreamMetrics,
+)
+from repro.data import CkIOPipeline, make_token_file
+from repro.kernels import ops
+
+
+# -- NumPy oracle (same ground truth as tests/test_device_ingest.py) ----------
+
+def np_batch_oracle(linear, B, S, w0=0, valid_limit=None, pad_id=0):
+    S1 = S + 1
+    full_limit = w0 + B * S1
+    if valid_limit is None:
+        valid_limit = full_limit
+    buf = np.full(full_limit + 1, pad_id, dtype=linear.dtype)
+    n = min(linear.size, full_limit + 1)
+    buf[:n] = linear[:n]
+    pos = w0 + np.arange(B)[:, None] * S1 + np.arange(S1 + 1)[None, :]
+    rows = buf[pos]
+    inputs = np.where(pos[:, :S] < valid_limit, rows[:, :S], pad_id)
+    labels = np.where(pos[:, 1:S + 1] < valid_limit, rows[:, 1:S + 1], pad_id)
+    return inputs, labels
+
+
+def random_chunks(rng, toks):
+    """Cut a token window into 1..8 contiguous chunks, shuffled arrival."""
+    n = toks.size
+    ncuts = int(rng.integers(0, min(7, n - 1) + 1))
+    cuts = (np.sort(rng.choice(np.arange(1, n), size=ncuts, replace=False))
+            if ncuts else np.array([], int))
+    bounds = [0, *cuts.tolist(), n]
+    pieces = [(bounds[i], bounds[i + 1]) for i in range(len(bounds) - 1)]
+    order = rng.permutation(len(pieces))
+    chunks = [jnp.asarray(toks[pieces[i][0]:pieces[i][1]]) for i in order]
+    starts = [pieces[i][0] for i in order]
+    return chunks, starts
+
+
+# -- fused chunk-ingest kernels vs oracle -------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_ingest_chunks_window_matches_oracle(seed):
+    rng = np.random.default_rng(400 + seed)
+    B = int(rng.integers(1, 4))
+    S = int(rng.integers(2, 12))
+    valid = int(rng.integers(1, B * (S + 1) + 1))
+    toks = rng.integers(1, 1 << 20, size=valid).astype(np.int32)
+    chunks, starts = random_chunks(rng, toks)
+    # present in file order (the pipeline's handle reorder)
+    order = np.argsort(starts)
+    chunks = [chunks[i] for i in order]
+    want = np_batch_oracle(toks, B, S, 0, valid)
+    got = ops.ingest_chunks_window(chunks, global_batch=B, seq_len=S,
+                                   valid_limit=valid)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), w)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_ingest_chunks_block_matches_oracle(seed):
+    rng = np.random.default_rng(500 + seed)
+    T = int(rng.integers(2, 9))
+    NB = int(rng.integers(2, 9))
+    B, S = 2, NB * T // 2 - 1          # B*(S+1) == NB*T tokens
+    if S < 1:
+        B, S = 1, NB * T - 1
+    toks = rng.integers(1, 1 << 20, size=NB * T).astype(np.int32)
+    staged_order = rng.permutation(NB)           # arrival: staged[i] = block
+    chunks = [jnp.asarray(toks[b * T:(b + 1) * T]) for b in staged_order]
+    perm = np.empty(NB, dtype=np.int32)          # file block -> staged block
+    for i, b in enumerate(staged_order):
+        perm[b] = i
+    want = np_batch_oracle(toks, B, S)
+    got = ops.ingest_chunks_block(chunks, jnp.asarray(perm),
+                                  global_batch=B, seq_len=S)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), w)
+
+
+def test_ingest_chunks_tokens_matches_ref():
+    rng = np.random.default_rng(7)
+    B, S, L = 2, 5, 40
+    toks = rng.integers(0, 1000, size=L).astype(np.int32)
+    chunks = [jnp.asarray(toks[:13]), jnp.asarray(toks[13:27]),
+              jnp.asarray(toks[27:])]
+    row_idx = rng.integers(-1, L, size=(B, S + 1)).astype(np.int32)
+    got = ops.ingest_chunks_tokens(chunks, jnp.asarray(row_idx), pad_id=9)
+    staged = jnp.asarray(toks)
+    want = ops.reassemble_tokens(staged, jnp.asarray(row_idx), pad_id=9)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_staged_concat():
+    a = jnp.arange(5, dtype=jnp.int32)
+    assert ops.staged_concat([a]) is a
+    out = ops.staged_concat([a, a + 5])
+    np.testing.assert_array_equal(np.asarray(out), np.arange(10))
+    with pytest.raises(ValueError):
+        ops.staged_concat([])
+
+
+# -- completion-stream semantics ----------------------------------------------
+
+def _session(ck, path, nbytes, offset=4096, **opts):
+    f = ck.open_sync(path, FileOptions(**opts))
+    return f, ck.start_read_session_sync(f, nbytes, offset)
+
+
+@pytest.fixture()
+def token_path(tmp_path):
+    p = str(tmp_path / "stream.bin")
+    make_token_file(p, 40_000, vocab_size=97, seed=21)
+    return p
+
+
+def test_stream_replay_and_order(token_path):
+    """A late subscriber sees every splinter exactly once, past events
+    first, all in arrival order."""
+    ck = CkIO(num_pes=2)
+    f, sess = _session(ck, token_path, 64 * 1024,
+                       num_readers=3, splinter_bytes=8 * 1024)
+    assert sess.readers.join(30.0)
+    got = []
+    token = sess.subscribe_splinters(got.append)   # after completion: replay
+    assert [e.index for e in got] == list(sess.arrival_order)
+    assert sorted(e.index for e in got) == list(
+        range(len(sess.plan.splinters)))
+    for e in got:
+        assert e.nbytes > 0 and e.arena_off == e.offset - sess.offset
+        assert e.t_arrival > 0
+    sess.unsubscribe_splinters(token)
+    # events() snapshot agrees
+    assert [e.index for e in sess.splinter_events] == list(sess.arrival_order)
+    ck.close_read_session_sync(sess)
+    ck.close_sync(f)
+
+
+def test_stream_live_delivery_and_unsubscribe_barrier(token_path):
+    ck = CkIO(num_pes=2)
+    f, sess = _session(ck, token_path, 96 * 1024, num_readers=2,
+                       splinter_bytes=8 * 1024,
+                       delay_model=lambda r, sp: 0.005)
+    got = []
+    lock = threading.Lock()
+
+    def cb(ev):
+        with lock:
+            got.append(ev.index)
+
+    token = sess.readers.subscribe(cb)
+    sess.readers.join(30.0)
+    with lock:
+        n_at_join = len(got)
+    assert n_at_join == len(sess.plan.splinters)
+    sess.readers.unsubscribe(token)
+    # barrier: no further deliveries counted after unsubscribe returns
+    assert len(got) == n_at_join
+    ck.close_read_session_sync(sess)
+    ck.close_sync(f)
+
+
+def test_read_stream_api_routing_and_complete(token_path):
+    ck = CkIO(num_pes=4)
+    f, sess = _session(ck, token_path, 64 * 1024, num_readers=2,
+                       splinter_bytes=8 * 1024)
+    events, done = [], []
+    ck.read_stream(sess, events.append, pe=1, on_complete=lambda: done.append(1))
+    ck.run_until(lambda: bool(done), timeout=30.0)
+    assert sorted(e.index for e in events) == list(
+        range(len(sess.plan.splinters)))
+    assert done == [1]
+    with pytest.raises(RuntimeError):
+        sess.closed = True
+        ck.read_stream(sess, events.append)
+    sess.closed = False
+    ck.close_read_session_sync(sess)
+    ck.close_sync(f)
+
+
+def test_read_stream_on_complete_requires_replay(token_path):
+    ck = CkIO(num_pes=2)
+    f, sess = _session(ck, token_path, 32 * 1024, num_readers=2,
+                       splinter_bytes=8 * 1024)
+    with pytest.raises(ValueError):
+        ck.read_stream(sess, lambda ev: None, replay=False,
+                       on_complete=lambda: None)
+    ck.close_read_session_sync(sess)
+    ck.close_sync(f)
+
+
+def test_read_stream_drop_stale_consumer(token_path):
+    """Events routed to a deregistered consumer are dropped and counted —
+    never delivered, never rerouted."""
+    ck = CkIO(num_pes=2)
+    f, sess = _session(ck, token_path, 64 * 1024, num_readers=2,
+                       splinter_bytes=8 * 1024)
+    client = ck.make_client(pe=1)
+    client.deregister()                       # retired before delivery
+    got = []
+    ck.read_stream(sess, got.append, client=client)
+    sess.readers.join(30.0)
+    ck.sched.pump()
+    assert got == []
+    assert ck.locations.stale_deliveries == len(sess.plan.splinters)
+    ck.close_read_session_sync(sess)
+    ck.close_sync(f)
+
+
+def test_lookup_or_drop_and_count_stale():
+    ck = CkIO(num_pes=2)
+    c = ck.make_client(pe=1)
+    assert ck.locations.lookup_or_drop(c.vid) == 1
+    c.deregister()
+    assert ck.locations.lookup_or_drop(c.vid) is None
+    assert ck.locations.stale_deliveries == 1
+    ck.locations.count_stale()
+    assert ck.locations.stale_deliveries == 2
+    # drop_stale callbacks require proxy routing
+    from repro.core.futures import CkCallback
+    with pytest.raises(ValueError):
+        CkCallback(lambda: None, pe=0, drop_stale=True)
+
+
+# -- StreamMetrics invariants -------------------------------------------------
+
+def test_stream_metrics_overlap_and_latency():
+    m = StreamMetrics()
+    m.record_chunk(100, 2, 0.01, [0.02, 0.04])
+    assert m.splinters_staged == 2 and m.stage_chunks == 1
+    assert m.max_stage_latency_s == pytest.approx(0.04)
+    assert m.mean_stage_latency_s() == pytest.approx(0.03)
+    m.stage_inflight(100)
+    m.stage_inflight(50)
+    m.stage_inflight(-100)
+    assert m.inflight_bytes == 50 and m.inflight_bytes_hwm == 150
+    # full overlap: stage span inside read span, clamped to step time
+    m.record_step((0.0, 1.0), (0.2, 0.8), 1.0)
+    assert m.overlap_fraction() == pytest.approx(0.6)
+    # disjoint spans -> no overlap credit
+    m.record_step((0.0, 1.0), (2.0, 3.0), 1.0)
+    assert m.overlap_fraction() == pytest.approx(0.3)
+    # overlap longer than the step wall is clamped
+    m2 = StreamMetrics()
+    m2.record_step((0.0, 10.0), (0.0, 10.0), 1.0)
+    assert m2.overlap_fraction() == pytest.approx(1.0)
+    s = m.summary()
+    assert s["stale_events"] == 0 and s["steps"] == 2
+    m.record_stale_event()
+    assert m.summary()["stale_events"] == 1
+
+
+# -- pipeline: equivalence, permutations, lifetime ----------------------------
+
+@pytest.fixture(scope="module")
+def corpus(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("streaming") / "corpus.bin")
+    make_token_file(path, 60_000, vocab_size=451, seed=13)
+    raw = np.fromfile(path, dtype=np.uint32, offset=4096).view(np.int32)
+    return path, raw
+
+
+def make_pipe(path, streaming=True, **kw):
+    kw.setdefault("num_pes", 2)
+    kw.setdefault("num_consumers", 8)
+    kw.setdefault("file_opts", FileOptions(num_readers=3,
+                                           splinter_bytes=16 * 1024))
+    return CkIOPipeline(path, global_batch=4, seq_len=64,
+                        streaming=streaming, **kw)
+
+
+def test_streaming_matches_file_and_counters(corpus):
+    path, raw = corpus
+    pipe = make_pipe(path)
+    need = 4 * 65
+    for s in range(4):
+        x, y = pipe.get_batch_device(s)
+        ref = raw[s * need:(s + 1) * need].reshape(4, 65)
+        np.testing.assert_array_equal(np.asarray(x), ref[:, :-1])
+        np.testing.assert_array_equal(np.asarray(y), ref[:, 1:])
+    m = pipe.ingest.summary()
+    assert m["host_permute_bytes"] == 0
+    assert m["device_steps"] == 4
+    sm = pipe.stream.summary()
+    assert sm["steps"] == 4
+    assert sm["splinters_staged"] >= 4          # at least the fetched windows
+    assert sm["bytes_staged"] >= 4 * need * 4
+    pipe.close()
+
+
+def test_streaming_equals_whole_window_bitwise(corpus):
+    """The tentpole equivalence: streamed batches are bit-identical to the
+    streaming=False whole-window path, under stragglers + stealing."""
+    path, _ = corpus
+    delays = lambda r, sp: 0.008 if r == 0 else 0.001   # noqa: E731
+    opts = FileOptions(num_readers=3, splinter_bytes=8 * 1024,
+                       delay_model=delays)
+    pipe_w = make_pipe(path, streaming=False, file_opts=opts)
+    pipe_s = make_pipe(path, file_opts=opts)
+    for s in range(4):
+        wx, wy = pipe_w.get_batch_device(s)
+        sx, sy = pipe_s.get_batch_device(s)
+        np.testing.assert_array_equal(np.asarray(wx), np.asarray(sx))
+        np.testing.assert_array_equal(np.asarray(wy), np.asarray(sy))
+    assert pipe_s.ingest.host_permute_bytes == 0
+    pipe_w.close()
+    pipe_s.close()
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_streaming_arbitrary_permutations_seeded(corpus, seed):
+    """Seeded sweep: per-splinter delays scramble arrival arbitrarily; the
+    streamed batch must still be exact (ordering/completeness oracle)."""
+    path, raw = corpus
+    rng = np.random.default_rng(900 + seed)
+    jitter = {i: float(d) for i, d in enumerate(
+        rng.uniform(0.0, 0.01, size=256))}
+    opts = FileOptions(num_readers=4, splinter_bytes=4 * 1024,
+                       delay_model=lambda r, sp: jitter[sp.index % 256])
+    pipe = make_pipe(path, file_opts=opts)
+    need = 4 * 65
+    step = int(rng.integers(0, 3))
+    x, y = pipe.get_batch_device(step)
+    ref = raw[step * need:(step + 1) * need].reshape(4, 65)
+    np.testing.assert_array_equal(np.asarray(x), ref[:, :-1])
+    np.testing.assert_array_equal(np.asarray(y), ref[:, 1:])
+    pipe.close()
+
+
+def test_streaming_remainder_window(tmp_path):
+    path = str(tmp_path / "rem.bin")
+    make_token_file(path, 1000, vocab_size=50, seed=3)
+    raw = np.fromfile(path, dtype=np.uint32, offset=4096).view(np.int32)
+    pipe = CkIOPipeline(path, global_batch=2, seq_len=32, num_pes=2,
+                        drop_remainder=False, streaming=True,
+                        file_opts=FileOptions(num_readers=2))
+    rows = 2 * 33
+    last = pipe.num_steps - 1
+    valid = 1000 - last * rows
+    assert 0 < valid < rows
+    want = np_batch_oracle(raw[last * rows:], 2, 32, 0, valid)
+    xd, yd = pipe.get_batch_device(last)
+    np.testing.assert_array_equal(np.asarray(xd), want[0])
+    np.testing.assert_array_equal(np.asarray(yd), want[1])
+    pipe.close()
+
+
+def test_streaming_overlap_metrics_invariants(corpus):
+    path, _ = corpus
+    budget = 32 * 1024
+    pipe = make_pipe(path, max_inflight_stage_bytes=budget,
+                     file_opts=FileOptions(num_readers=3,
+                                           splinter_bytes=8 * 1024,
+                                           delay_model=lambda r, sp: 0.003))
+    for s in range(3):
+        pipe.get_batch_device(s)
+    sm = pipe.stream.summary()
+    assert 0.0 <= sm["overlap_fraction"] <= 1.0
+    assert sm["inflight_bytes_hwm"] <= budget
+    assert sm["mean_stage_latency_s"] <= sm["max_stage_latency_s"]
+    assert sm["splinters_staged"] == sm["stage_chunks"]  # one chunk each
+    assert pipe.stream.inflight_bytes == 0      # all retired after fetches
+    pipe.close()
+
+
+def test_streaming_mid_stream_resize_and_migration(corpus):
+    """resize()/migrate_consumer racing streamed deliveries: steps stay
+    bit-exact, zero host copies, and nothing leaks."""
+    path, raw = corpus
+    opts = FileOptions(num_readers=3, splinter_bytes=8 * 1024,
+                       delay_model=lambda r, sp: 0.004)
+    pipe = make_pipe(path, file_opts=opts)
+    need = 4 * 65
+    x0, _ = pipe.get_batch_device(0)
+    pipe.resize(12)                      # grow with deliveries in flight
+    x1, _ = pipe.get_batch_device(1)
+    pipe.migrate_consumer(0, 1)
+    pipe.resize(3)                       # shrink: retired consumers' events drop
+    x2, _ = pipe.get_batch_device(2)
+    for s, x in enumerate((x0, x1, x2)):
+        ref = raw[s * need:(s + 1) * need].reshape(4, 65)
+        np.testing.assert_array_equal(np.asarray(x), ref[:, :-1])
+    assert pipe.ingest.host_permute_bytes == 0
+    assert pipe.ck.locations.count() == 3
+    pipe.close()
+
+
+def test_streaming_shrink_to_one_consumer_completes(tmp_path):
+    """Shrink below the event-routing fan-out mid-read: dropped events are
+    counted and the batch still completes from the event log."""
+    path = str(tmp_path / "shrink.bin")
+    make_token_file(path, 30_000, vocab_size=77, seed=8)
+    raw = np.fromfile(path, dtype=np.uint32, offset=4096).view(np.int32)
+    opts = FileOptions(num_readers=2, splinter_bytes=8 * 1024,
+                       delay_model=lambda r, sp: 0.01)
+    pipe = CkIOPipeline(path, global_batch=2, seq_len=32, num_pes=2,
+                        num_consumers=8, file_opts=opts, streaming=True)
+    pipe.resize(1)                       # most in-flight events now stale
+    x, y = pipe.get_batch_device(0)
+    need = 2 * 33
+    np.testing.assert_array_equal(np.asarray(x),
+                                  raw[:need].reshape(2, 33)[:, :-1])
+    pipe.close()
+
+
+def test_late_event_after_finalize_is_dropped_and_counted(corpus):
+    """A splinter event reaching a finalized step is dropped + counted (the
+    stale_deliveries counter extension), never staged twice."""
+    path, _ = corpus
+    pipe = make_pipe(path)
+    pipe.get_batch_device(0)
+    st_before = pipe.ck.locations.stale_deliveries
+    buf = type("B", (), {"ready": None})()
+    # replay the authoritative events of the *retired* step's stream into
+    # the handler: every one must be dropped
+    retired_sess = pipe._retired[-1] if pipe._retired else None
+    assert retired_sess is not None
+    from repro.data.pipeline import _StreamState
+    st = _StreamState(session=retired_sess, retired=True)
+    events = retired_sess.splinter_events[:3]
+    assert events
+    for ev in events:
+        pipe._on_stream_event(buf, st, ev)
+    assert pipe.stream.stale_events == len(events)
+    assert pipe.ck.locations.stale_deliveries == st_before + len(events)
+    assert st.pending == [] and st.chunks == []
+    pipe.close()
+
+
+def test_streaming_host_path_still_works(corpus):
+    """get_batch on a streaming pipeline aborts the stream cleanly and
+    returns the host-path batch."""
+    path, raw = corpus
+    pipe = make_pipe(path)
+    need = 4 * 65
+    x, y = pipe.get_batch(0)
+    np.testing.assert_array_equal(x, raw[:need].reshape(4, 65)[:, :-1])
+    # stream state was torn down, not leaked
+    assert all(b.stream is None for b in pipe._bufs.values()
+               if b.session is not None and b.ready.done)
+    xd, _ = pipe.get_batch_device(1)     # device path still fine afterwards
+    np.testing.assert_array_equal(np.asarray(xd),
+                                  raw[need:2 * need].reshape(4, 65)[:, :-1])
+    pipe.close()
+
+
+def test_streaming_sharding_falls_back_to_whole_window(corpus):
+    path, raw = corpus
+    pipe = make_pipe(path)
+    dev = jax.devices()[0]
+    from jax.sharding import SingleDeviceSharding
+
+    x, y = pipe.get_batch_device(0, sharding=SingleDeviceSharding(dev))
+    need = 4 * 65
+    np.testing.assert_array_equal(np.asarray(x),
+                                  raw[:need].reshape(4, 65)[:, :-1])
+    pipe.close()
+
+
+def test_streaming_requires_zero_copy(corpus):
+    path, _ = corpus
+    with pytest.raises(ValueError):
+        CkIOPipeline(path, global_batch=2, seq_len=16, num_pes=2,
+                     streaming=True, zero_copy=False)
+
+
+def test_streaming_rejects_misaligned_splinters(corpus):
+    path, _ = corpus
+    with pytest.raises(ValueError, match="multiple of the token itemsize"):
+        CkIOPipeline(path, global_batch=2, seq_len=16, num_pes=2,
+                     streaming=True,
+                     file_opts=FileOptions(num_readers=2,
+                                           splinter_bytes=10_001))
+    # the whole-window path accepts the same options
+    pipe = CkIOPipeline(path, global_batch=2, seq_len=16, num_pes=2,
+                        streaming=False,
+                        file_opts=FileOptions(num_readers=2,
+                                              splinter_bytes=10_001))
+    pipe.close()
+
+
+def test_streaming_chunk_views_lifetime(corpus):
+    """Streamed chunk views: pinned until the step retires, then released
+    (use-after-retire raises)."""
+    path, _ = corpus
+    pipe = make_pipe(path)
+    pipe.get_batch_device(0)
+    st = pipe._staged[-1]
+    views = [v for _, v in st.host_tokens]
+    assert views and all(not v.readonly or True for v in views)
+    for v in views:
+        bytes(v[:4])                     # alive before the next fetch
+    pipe.get_batch_device(1)             # retires step 0
+    with pytest.raises(ValueError):
+        bytes(views[0])
+    pipe.close()
+
+
+def test_reset_stream_metrics_carries_inflight(corpus):
+    """reset_stream_metrics opens a fresh window without desynchronizing
+    the in-flight balance of already-issued transfers."""
+    path, raw = corpus
+    pipe = make_pipe(path, file_opts=FileOptions(
+        num_readers=3, splinter_bytes=8 * 1024,
+        delay_model=lambda r, sp: 0.002))
+    pipe.get_batch_device(0)             # warm; prefetch streams staging
+    old = pipe.reset_stream_metrics()
+    assert pipe.stream is not old
+    assert pipe.stream.inflight_bytes == old.inflight_bytes
+    assert pipe.stream.steps == 0
+    need = 4 * 65
+    x, _ = pipe.get_batch_device(1)
+    np.testing.assert_array_equal(np.asarray(x),
+                                  raw[need:2 * need].reshape(4, 65)[:, :-1])
+    # every transfer retired cleanly against the new window
+    pipe.get_batch_device(2)
+    assert pipe.stream.inflight_bytes >= 0
+    pipe.close()
+    assert pipe.stream.inflight_bytes == 0
+
+
+# -- adaptive splinter sizing + autotuner satellite ---------------------------
+
+def test_autotuner_no_trial_queue_and_deterministic():
+    t = AutoTuner(num_pes=4)
+    assert not hasattr(t, "_trial_queue")
+    assert t.suggest(1 << 30) == t.suggest(1 << 30)   # no history: seed
+    t.record(4, 100.0)
+    # fixed exploration order: best(4, tried) -> 2 -> 8
+    assert t.suggest(1 << 30) == 2
+    t.record(2, 50.0)
+    assert t.suggest(1 << 30) == 8
+    t.record(8, 80.0)
+    # neighbourhood explored: exploit the best
+    assert t.suggest(1 << 30) == 4
+    assert t.suggest(1 << 30) == 4                    # deterministic
+
+
+def test_autotuner_record_session_hook():
+    t = AutoTuner(num_pes=4)
+    m = SessionMetrics()
+    m.session_started(1 << 20, 3)
+    m.record_read(0, 1 << 20, 0.01)
+    t.record_session(m)
+    assert t.best() == 3
+    empty = SessionMetrics()
+    t.record_session(empty)              # no signal: ignored
+    assert list(t.observations) == [3]
+
+
+def test_splinter_sizer_throughput_and_steals():
+    sz = SplinterSizer()
+    assert sz.suggest(8 << 20) == 8 << 20         # unobserved: default
+    fast = SessionMetrics()
+    fast.session_started(1 << 26, 4)
+    fast.record_read(0, 1 << 26, 0.1)             # ~671 MB/s per thread
+    sz.record_session(fast)
+    big = sz.suggest(8 << 20)
+    assert big >= 16 << 20                        # large on streaming stripes
+    assert big % (256 * 1024) == 0
+    # heavy stealing shrinks the unit
+    stolen = SessionMetrics()
+    stolen.session_started(1 << 26, 4)
+    for _ in range(10):
+        stolen.record_read(0, 1 << 22, 0.00625)
+    stolen.steals = 8
+    sz2 = SplinterSizer()
+    sz2.record_session(stolen)
+    sz_no_steals = SplinterSizer()
+    calm = SessionMetrics()
+    calm.session_started(1 << 26, 4)
+    for _ in range(10):
+        calm.record_read(0, 1 << 22, 0.00625)
+    sz_no_steals.record_session(calm)
+    assert sz2.suggest(8 << 20) < sz_no_steals.suggest(8 << 20)
+    # clamped to bounds
+    slow = SessionMetrics()
+    slow.session_started(1 << 20, 1)
+    slow.record_read(0, 1024, 1.0)
+    sz3 = SplinterSizer()
+    sz3.record_session(slow)
+    assert sz3.suggest(8 << 20) == sz3.min_bytes
+
+
+def test_adaptive_splinters_resize_sessions(corpus):
+    """adaptive_splinters=True: after observed sessions, new session plans
+    use the sizer's suggestion (shared Director observation path)."""
+    path, _ = corpus
+    ck = CkIO(num_pes=2)
+    opts = FileOptions(num_readers=2, splinter_bytes=8 * 1024,
+                       adaptive_splinters=True)
+    f = ck.open_sync(path, opts)
+    s1 = ck.start_read_session_sync(f, 64 * 1024, 4096)
+    assert s1.plan.splinter_bytes == 8 * 1024     # seed: no observations
+    s1.readers.join(30.0)
+    ck.close_read_session_sync(s1)
+    assert ck.director.splinter_sizer.sessions_observed == 1
+    assert ck.director.tuner.observations            # tuner fed too
+    want = ck.director.splinter_sizer.suggest(8 * 1024)
+    s2 = ck.start_read_session_sync(f, 64 * 1024, 4096)
+    assert s2.plan.splinter_bytes == max(4096, want)
+    ck.close_read_session_sync(s2)
+    ck.close_sync(f)
+
+
+def test_streaming_pipeline_with_adaptive_splinters(corpus):
+    path, raw = corpus
+    opts = FileOptions(num_readers=2, splinter_bytes=8 * 1024,
+                       adaptive_splinters=True)
+    pipe = make_pipe(path, file_opts=opts)
+    need = 4 * 65
+    for s in range(4):                   # sizes adapt across step sessions
+        x, _ = pipe.get_batch_device(s)
+        ref = raw[s * need:(s + 1) * need].reshape(4, 65)
+        np.testing.assert_array_equal(np.asarray(x), ref[:, :-1])
+    assert pipe.ck.director.splinter_sizer.sessions_observed >= 1
+    pipe.close()
