@@ -1,0 +1,252 @@
+"""NUMA locality microbenchmark: cross-domain delivery bytes under a
+skewed-consumer layout, locality-blind vs topology-aware reader placement.
+
+The scenario is the paper's placement lever (§III-C.4) with memory locality
+made explicit: all step-window consumers live on the PEs of ONE NUMA domain
+(the skew every data-parallel trainer has — the input pipeline feeds the
+host threads of one socket), while reader placement either ignores that
+(``node_spread``/``round_robin`` — the locality-blind default) or follows
+it (``near_consumers`` with a ``Topology``: readers spread over the PEs of
+the consumers' domains; arena stripes first-touch-faulted by their own —
+optionally pinned — reader threads).
+
+Every delivered piece is classified same- vs cross-domain by the session's
+``LocalityMetrics`` (reader stripe domain vs consuming PE domain), merged
+into the Director aggregate as step sessions close. The tracked contract
+(asserted, not assumed):
+
+  * cross-domain delivery bytes drop >= 2x under topology-aware placement
+    (in this layout they drop to 0 — every stripe lands on and is served
+    from the consumers' domain);
+  * ``bytes_copied == 0`` on every session (borrowed-view delivery is
+    untouched by the locality machinery);
+  * streamed (``streaming=True``) batches stay bit-identical to the
+    whole-window device path with the topology enabled.
+
+Since the container itself typically exposes one NUMA node, domains here
+are *logical* (the ``Topology`` model over the PE grid) with the host's
+real CPU set(s) attached so ``numa_pin`` exercises the actual
+``sched_setaffinity`` path; cross-domain bytes are an exact count either
+way — the counter a real multi-socket host would want minimized.
+
+Writes ``BENCH_numa.json`` at the repo root (full mode).
+
+Usage: python benchmarks/perf_numa.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import CkIO, FileOptions, Topology
+from repro.data import CkIOPipeline, make_token_file
+from repro.io.numa import detect_numa_domains
+
+NUM_PES = 8
+PES_PER_NODE = 4          # 2 "nodes"
+DOMAINS_PER_NODE = 2      # 4 memory domains of 2 PEs
+NUM_READERS = 4
+CONSUMER_PES = [0, 1]     # the skew: every consumer in domain 0
+
+
+def workload(quick: bool):
+    if quick:
+        return dict(steps=4, global_batch=64, seq_len=1023,
+                    splinter_bytes=32 * 1024)       # 256 KiB windows
+    return dict(steps=12, global_batch=128, seq_len=2047,
+                splinter_bytes=128 * 1024)          # 1 MiB windows
+
+
+def make_topology() -> Topology:
+    # Logical 4-domain grid carrying the host's real NUMA CPU sets (cycled)
+    # so numa_pin exercises sched_setaffinity wherever it runs.
+    return Topology.with_host_cpus(NUM_PES, PES_PER_NODE, DOMAINS_PER_NODE)
+
+
+def ensure_corpus(wl: dict) -> str:
+    tokens = (wl["steps"] + 4) * wl["global_batch"] * (wl["seq_len"] + 1) + 64
+    path = os.path.join(common.BENCH_DIR,
+                        f"numa_{wl['steps']}x{wl['global_batch']}"
+                        f"x{wl['seq_len']}.bin")
+    if not os.path.exists(path):
+        make_token_file(path, tokens, vocab_size=32000, seed=23)
+    return path
+
+
+def run_placement(path: str, wl: dict, placement: str, topo: Topology,
+                  numa_pin: bool = False):
+    """Drive the host zero-copy pipeline under one placement policy;
+    returns (locality_summary, bytes_copied_total)."""
+    copied = {"total": 0}
+    pipe = CkIOPipeline(
+        path, wl["global_batch"], wl["seq_len"],
+        ckio=CkIO(num_pes=NUM_PES, pes_per_node=PES_PER_NODE),
+        num_consumers=16, consumer_pes=CONSUMER_PES,
+        file_opts=FileOptions(num_readers=NUM_READERS,
+                              splinter_bytes=wl["splinter_bytes"],
+                              placement=placement, topology=topo,
+                              prefault_arena=True, numa_pin=numa_pin),
+    )
+    pipe.ck.director.add_observer(
+        lambda m: copied.__setitem__("total", copied["total"] + m.bytes_copied))
+    for s in range(wl["steps"]):
+        pipe.get_batch(s)
+    pipe.close()
+    return pipe.ck.director.locality.summary(), copied["total"]
+
+
+def check_streamed_identity(path: str, wl: dict, topo: Topology,
+                            nsteps: int = 3) -> bool:
+    """Streamed and whole-window device batches must stay bit-identical
+    with the topology-aware runtime on."""
+    pipes = [
+        CkIOPipeline(
+            path, wl["global_batch"], wl["seq_len"],
+            ckio=CkIO(num_pes=NUM_PES, pes_per_node=PES_PER_NODE),
+            num_consumers=16, consumer_pes=CONSUMER_PES,
+            streaming=streaming,
+            file_opts=FileOptions(num_readers=NUM_READERS,
+                                  splinter_bytes=wl["splinter_bytes"],
+                                  placement="near_consumers", topology=topo,
+                                  prefault_arena=True),
+        )
+        for streaming in (False, True)
+    ]
+    ok = True
+    for s in range(nsteps):
+        (wx, wy), (sx, sy) = (p.get_batch_device(s) for p in pipes)
+        ok &= bool(np.array_equal(np.asarray(wx), np.asarray(sx))
+                   and np.array_equal(np.asarray(wy), np.asarray(sy)))
+    for p in pipes:
+        ok &= p.ingest.summary()["host_permute_bytes"] == 0
+        p.close()
+    return ok
+
+
+def adaptive_per_reader_demo(path: str, wl: dict):
+    """One straggler session under per-reader adaptive sizing; returns the
+    per-reader steal fractions and next-session splinter sizes.
+
+    ``target_splinter_s`` is lowered so the warm-cache throughput target
+    lands inside ``[min_bytes, max_bytes]`` (at the default 50 ms target
+    this container's page-cache bandwidth rails both readers at the max
+    and hides the shrink); the deterministic signal is the straggler's
+    steal pressure, visible as a smaller suggested splinter for reader 0."""
+    ck = CkIO(num_pes=4, pes_per_node=2)
+    sizer = ck.director.splinter_sizer
+    sizer.min_bytes = 4096
+    sizer.target_splinter_s = 0.002
+    opts = FileOptions(num_readers=2, splinter_bytes=wl["splinter_bytes"],
+                       adaptive_splinters=True,
+                       delay_model=lambda r, sp: 0.008 if r == 0 else 0.0)
+    f = ck.open_sync(path, opts)
+    nbytes = min(f.size, 4 * 1024 * 1024)
+    s = ck.start_read_session_sync(f, nbytes, 0)
+    s.readers.join(120.0)
+    ck.close_read_session_sync(s)
+    sizes = sizer.suggest_per_reader(2, wl["splinter_bytes"]) or []
+    frac = {r: round(st.steal_frac, 4) for r, st in sizer.per_reader.items()}
+    ck.close_sync(f)
+    return {"per_reader_splinter_bytes": [int(x) for x in sizes],
+            "per_reader_steal_frac": frac,
+            "straggler_stolen_from": frac.get(0, 0.0) > 0}
+
+
+def run(quick: bool = False) -> dict:
+    wl = workload(quick)
+    path = ensure_corpus(wl)
+    topo = make_topology()
+
+    blind, copied_blind = run_placement(path, wl, "node_spread", topo)
+    rr, copied_rr = run_placement(path, wl, "round_robin", topo)
+    aware, copied_aware = run_placement(path, wl, "near_consumers", topo,
+                                        numa_pin=True)
+    match = check_streamed_identity(path, wl, topo)
+    adaptive = adaptive_per_reader_demo(path, wl)
+
+    before_cross = int(blind["cross_domain_bytes"])
+    after_cross = int(aware["cross_domain_bytes"])
+    reduction = before_cross / max(after_cross, 1)
+    bytes_copied = int(copied_blind + copied_rr + copied_aware)
+    window_bytes = wl["global_batch"] * (wl["seq_len"] + 1) * 4
+
+    report = {
+        "bench": "perf_numa",
+        "workload": {**wl, "window_bytes": window_bytes,
+                     "num_pes": NUM_PES, "pes_per_node": PES_PER_NODE,
+                     "domains_per_node": DOMAINS_PER_NODE,
+                     "num_readers": NUM_READERS,
+                     "consumer_pes": CONSUMER_PES,
+                     "host_numa_domains": len(detect_numa_domains())},
+        "before_locality_blind": {
+            "placement": "node_spread",
+            "cross_domain_bytes": before_cross,
+            "same_domain_bytes": int(blind["same_domain_bytes"]),
+            "cross_domain_fraction": round(
+                blind["cross_domain_fraction"], 4),
+        },
+        "round_robin_reference": {
+            "cross_domain_bytes": int(rr["cross_domain_bytes"]),
+            "cross_domain_fraction": round(rr["cross_domain_fraction"], 4),
+        },
+        "after_topology_aware": {
+            "placement": "near_consumers + Topology",
+            "cross_domain_bytes": after_cross,
+            "same_domain_bytes": int(aware["same_domain_bytes"]),
+            "cross_domain_fraction": round(
+                aware["cross_domain_fraction"], 4),
+            "prefault_pages": int(aware["prefault_pages"]),
+            "pinned_threads": int(aware["pinned_threads"]),
+            "pin_failures": int(aware["pin_failures"]),
+        },
+        "cross_domain_reduction_x": round(reduction, 2),
+        "bytes_copied": bytes_copied,
+        "streamed_batches_match": bool(match),
+        "adaptive_per_reader": adaptive,
+        "note": "Skewed-consumer layout: every consumer client on domain-0 "
+                "PEs. Locality-blind node_spread stripes the session across "
+                "all domains, so ~half the delivered bytes cross a memory "
+                "domain; near_consumers+Topology places readers (and, via "
+                "pinned first-touch, their arena stripes) on the consumers' "
+                "domain, eliminating cross-domain delivery. bytes_copied "
+                "stays 0 (borrowed-view zero-copy); streamed and "
+                "whole-window device batches stay bit-identical.",
+    }
+    common.emit("numa_cross_domain_before", 0.0,
+                f"{before_cross / 1e6:.2f}MB")
+    common.emit("numa_cross_domain_after", 0.0, f"{after_cross / 1e6:.2f}MB")
+    common.emit("numa_reduction", 0.0, f"{reduction:.1f}x")
+    common.write_report("numa", report, quick)
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small windows / fewer steps (CI smoke)")
+    args = ap.parse_args()
+    report = run(quick=args.quick)
+    ok = (report["before_locality_blind"]["cross_domain_bytes"]
+          >= 2 * report["after_topology_aware"]["cross_domain_bytes"]
+          and report["before_locality_blind"]["cross_domain_bytes"] > 0
+          and report["bytes_copied"] == 0
+          and report["streamed_batches_match"])
+    print(f"# cross_domain {report['before_locality_blind']['cross_domain_bytes']}"
+          f" -> {report['after_topology_aware']['cross_domain_bytes']}"
+          f" ({report['cross_domain_reduction_x']}x), "
+          f"copied={report['bytes_copied']}, "
+          f"match={report['streamed_batches_match']} "
+          f"{'OK' if ok else 'FAIL'}")
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

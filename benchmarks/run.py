@@ -84,6 +84,14 @@ def perf_streaming() -> None:
     m.run(quick=common.QUICK)
 
 
+def perf_numa() -> None:
+    # Writes BENCH_numa.json at the repo root (cross-domain delivery bytes
+    # under a skewed-consumer layout: locality-blind vs topology-aware
+    # placement, zero-copy + streamed bit-identity preserved).
+    from benchmarks import perf_numa as m
+    m.run(quick=common.QUICK)
+
+
 ALL = [
     fig1_naive_overdecomposition,
     fig2_disk_vs_network,
@@ -97,6 +105,7 @@ ALL = [
     perf_hotpath,
     perf_device_ingest,
     perf_streaming,
+    perf_numa,
 ]
 
 

@@ -16,6 +16,10 @@
 #   benchmarks/perf_streaming.py --quick     event-driven splinter streaming
 #                                            (overlap fraction + streamed/
 #                                            whole-window bit-equality)
+#   benchmarks/perf_numa.py --quick          topology-aware placement
+#                                            (cross-domain delivery bytes
+#                                            drop, zero-copy + bit-identity
+#                                            preserved)
 # Coverage floor: line coverage of src/repro/core + src/repro/data +
 # src/repro/io over the core/data-focused tests must stay >= the floor in
 # scripts/coverage_floor.py (stdlib settrace fallback — no third-party deps
@@ -34,6 +38,9 @@ python benchmarks/perf_device_ingest.py --quick
 
 echo "== streaming benchmark (smoke, overlap + equivalence) =="
 python benchmarks/perf_streaming.py --quick
+
+echo "== numa benchmark (smoke, cross-domain locality + equivalence) =="
+python benchmarks/perf_numa.py --quick
 
 echo "== coverage floor (core + data + io) =="
 python scripts/coverage_floor.py

@@ -12,13 +12,22 @@ from repro.core.buffers import (
 )
 from repro.core.futures import CkCallback, CkFuture
 from repro.core.migration import Client, LocationManager, VirtualProxy
+from repro.core.placement import Topology, place_readers
 from repro.core.scheduler import BackgroundWorker, TaskScheduler
-from repro.core.metrics import IngestMetrics, SessionMetrics, StreamMetrics
+from repro.core.metrics import (
+    IngestMetrics,
+    LocalityMetrics,
+    SessionMetrics,
+    StreamMetrics,
+)
 from repro.core.session import FileHandle, FileOptions, Session
 from repro.core.assembler import ReadComplete
 
 __all__ = [
     "CkIO",
+    "Topology",
+    "place_readers",
+    "LocalityMetrics",
     "AutoTuner",
     "SplinterSizer",
     "suggest_num_readers",

@@ -197,11 +197,15 @@ class CkIO:
         offset: int,
         after_read: Union[CkCallback, CkFuture, None],
         client: Optional[Client] = None,
+        classify_locality: bool = True,
     ) -> None:
         """Residency signal only: like ``read_view`` but the completion
         message carries ``data=None`` and no borrow is created — for callers
         that will take their own arena view later (e.g. once per batch
-        rather than once per consumer)."""
+        rather than once per consumer). ``classify_locality=False`` keeps
+        this request out of the same-/cross-domain byte accounting (for
+        callers whose bytes are classified on another path — see
+        ``ReadAssembler.submit``)."""
         if session.closed:
             raise RuntimeError("read_notify() on closed session")
         if not session.contains(offset, nbytes):
@@ -214,7 +218,8 @@ class CkIO:
             cb = client.callback(cb.fn)
         pe = client.pe if client is not None else 0
         self.director.managers[pe].assembler.submit(
-            session, offset, nbytes, None, cb, materialize_view=False
+            session, offset, nbytes, None, cb, materialize_view=False,
+            classify_locality=classify_locality,
         )
 
     def read_stream(
@@ -267,9 +272,23 @@ class CkIO:
         total = len(session.plan.splinters)
         state = {"n": 0}
         lock = threading.Lock()
+        topo = session.opts.topology
 
         def deliver(ev) -> None:
             target = route(ev) if route is not None else client
+            if topo is not None:
+                # Streamed counterpart of the assembler's per-piece
+                # classification: streamed bytes are classified against
+                # the domain of the consumer each event is routed to (the
+                # pipeline's whole-window residency probe opts out with
+                # classify_locality=False, so nothing is counted twice).
+                # Classified at issue time (a drop-stale discard later
+                # still counts as routed bytes).
+                dest_pe = target.pe if target is not None else pe
+                session.readers.locality.record_delivery(
+                    ev.nbytes,
+                    session.readers.reader_domain(ev.reader)
+                    == topo.domain_of(dest_pe))
             if target is not None:
                 target.callback(on_splinter, drop_stale=True).send(
                     self.sched, ev)

@@ -11,10 +11,16 @@ task routed through the client's virtual proxy (so it survives migration).
 
 Hot-path structure (this is the per-piece cost every delivered byte pays):
 
-* pieces are **coalesced by node** (``pieces_for_range(coalesce_key=...)``):
-  contiguous stripes whose readers share a node merge into one piece — one
-  waiter, one scheduled task, one copy — since the session arena is directly
-  addressable within a node (Thakur-style request merging).
+* pieces are **coalesced by (node, memory domain)**
+  (``pieces_for_range(coalesce_key=...)``): contiguous stripes whose
+  readers share a scheduler node AND a NUMA domain (without a
+  ``Topology``, just the node) merge into one piece — one waiter, one
+  scheduled task, one copy — since the session arena is directly
+  addressable within a node (Thakur-style request merging). Domain
+  granularity keeps each merged piece's bytes on one memory controller,
+  so a same-domain assembler touches only local memory; with a topology,
+  cross- vs same-domain delivered bytes are tracked per session in
+  ``LocalityMetrics`` (the counter NUMA-aware placement is judged by).
 * ``dest=None`` selects the **borrowed-view** path (paper §III-C.4's
   zero-copy buffer→assembler hand-off): ``after_read`` receives a read-only
   ``memoryview`` into the session arena instead of a filled buffer. The view
@@ -91,13 +97,18 @@ class ReadAssembler:
         after_read: CkCallback,
         metrics: Optional[SessionMetrics] = None,
         materialize_view: bool = True,
+        classify_locality: bool = True,
     ) -> None:
         """Fulfil one client request.
 
         ``dest=None`` is the zero-copy path; with ``materialize_view=False``
         the completion message carries ``data=None`` (residency signal only —
         no borrow is created or tracked), for callers that will view the
-        arena themselves later."""
+        arena themselves later. ``classify_locality=False`` skips the
+        same-/cross-domain LocalityMetrics accounting for this request —
+        used by callers whose delivered bytes are classified elsewhere
+        (the streaming pipeline's whole-window residency probe, whose
+        bytes the splinter stream already classifies per event)."""
         readers = session.readers
         plan = session.plan
         zero_copy = dest is None
@@ -109,12 +120,24 @@ class ReadAssembler:
                     f"destination buffer too small: {len(dest_view)} < {nbytes}"
                 )
         metrics = metrics or session.metrics
+        # Coalesce by (node, NUMA domain) when a topology is configured
+        # (plain node otherwise): merged pieces never span a memory domain
+        # *or* a scheduler node — a merged piece is attributed to its
+        # first reader, so both the NetworkModel decision and the domain
+        # classification below stay correct for the whole piece.
         pieces = pieces_for_range(
-            plan, abs_off, nbytes, coalesce_key=readers.reader_node
+            plan, abs_off, nbytes, coalesce_key=readers.reader_locality
         )
         state = _RequestState(len(pieces))
         net = session.opts.network
         my_node = self.sched.node_of(self.pe)
+        topo = session.opts.topology
+        # Domain classification (LocalityMetrics) only runs with a
+        # topology: without one it would duplicate record_piece's
+        # cross-node counter at an extra lock acquisition per piece on
+        # the delivery hot path.
+        my_domain = (topo.domain_of(self.pe)
+                     if topo is not None and classify_locality else None)
 
         def finish() -> None:
             lat = time.perf_counter() - state.t0
@@ -136,6 +159,8 @@ class ReadAssembler:
         def make_piece_handler(reader: int, p_off: int, p_len: int):
             dst_lo = p_off - abs_off
             cross = readers.reader_node(reader) != my_node
+            cross_domain = (my_domain is not None
+                            and readers.reader_domain(reader) != my_domain)
 
             def deliver_on_pe() -> None:
                 timed = metrics.should_time_piece()
@@ -151,6 +176,8 @@ class ReadAssembler:
                     (time.perf_counter() - t0) if timed else None,
                     copied=copied,
                 )
+                if my_domain is not None:
+                    readers.locality.record_delivery(p_len, not cross_domain)
                 if state.piece_done():
                     finish()
 

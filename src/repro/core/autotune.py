@@ -29,6 +29,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.metrics import SessionMetrics
+from repro.io.posix import DEFAULT_ALIGN, aligned_floor
 
 
 def suggest_num_readers(
@@ -97,6 +98,15 @@ class AutoTuner:
 
 
 @dataclass
+class _ReaderEMA:
+    """Per-reader (stripe-index) smoothed observations."""
+
+    bps: float = 0.0
+    steal_frac: float = 0.0
+    sessions: int = 0
+
+
+@dataclass
 class SplinterSizer:
     """Observation-driven splinter sizing (streaming controller).
 
@@ -105,21 +115,37 @@ class SplinterSizer:
     a session where many splinters were stolen is straggler-bound, and
     smaller splinters bound its completion tighter (steal granularity).
     Both signals are EMA-smoothed so one outlier session cannot whipsaw the
-    size; the result is clamped to ``[min_bytes, max_bytes]`` and rounded
-    down to a 256 KiB multiple (FS-block friendly, stable across jitter).
+    size; the result is clamped to ``[min_bytes, max_bytes]``, rounded
+    down to a 256 KiB multiple (stable across jitter), and finally floored
+    to the FS block alignment (``io.posix.aligned_floor``) — shrink under
+    steal pressure can never produce a sub-block size that would put preadv
+    offsets off the block grid and break the zero-copy alignment contract.
     The smoothing + quantization also bound a side effect on the streamed
     device path: every size change alters the per-splinter chunk shapes
     and retraces the fused consume executable once, so suggestions must
     converge rather than wander (see data/pipeline.py).
+
+    Sizing is tracked at two granularities sharing one observation hook:
+
+    * **session-level** (``suggest``) — the EMA over all readers, the PR-3
+      behaviour;
+    * **per-reader** (``suggest_per_reader``) — one EMA per stripe index,
+      keyed by the per-reader breakdowns ``SessionMetrics`` records (bytes,
+      wall time, splinters stolen *from* that reader). A straggling stripe
+      alone gets fine splinters (tight steal granularity where it matters)
+      while healthy stripes keep large streaming reads; readers without
+      enough signal fall back to the session-level size.
     """
 
     min_bytes: int = 256 * 1024
     max_bytes: int = 64 * 1024 * 1024
     target_splinter_s: float = 0.05
     alpha: float = 0.5                 # EMA weight of the newest session
+    align: int = DEFAULT_ALIGN         # FS block floor for every suggestion
     sessions_observed: int = 0
     ema_reader_bps: float = 0.0
     ema_steal_frac: float = 0.0
+    per_reader: Dict[int, _ReaderEMA] = field(default_factory=dict)
 
     def record_session(self, metrics: SessionMetrics) -> None:
         """Same shared hook as ``AutoTuner.record_session``."""
@@ -133,15 +159,53 @@ class SplinterSizer:
         self.ema_reader_bps += a * (bps - self.ema_reader_bps)
         self.ema_steal_frac += a * (steal_frac - self.ema_steal_frac)
         self.sessions_observed += 1
+        # Per-reader fold: bytes/time/steals attributed to the planned
+        # stripe owner (stolen splinters count against their owner — the
+        # straggler — not the thief).
+        for r, nbytes in metrics.bytes_per_reader.items():
+            dt = metrics.read_time_per_reader.get(r, 0.0)
+            calls = metrics.reads_per_reader.get(r, 0)
+            if dt <= 0 or calls <= 0:
+                continue
+            st = self.per_reader.setdefault(r, _ReaderEMA())
+            ar = self.alpha if st.sessions else 1.0
+            st.bps += ar * (nbytes / dt - st.bps)
+            st.steal_frac += ar * (
+                metrics.steals_from_reader.get(r, 0) / calls - st.steal_frac)
+            st.sessions += 1
+
+    def _size_from(self, bps: float, steal_frac: float) -> int:
+        size = bps * self.target_splinter_s
+        # Steal pressure shrinks the unit: at >=50% stolen splinters the
+        # size bottoms out at a quarter of the throughput-derived target.
+        shrink = 1.0 - 1.5 * min(steal_frac, 0.5)
+        size = int(size * shrink)
+        size = max(self.min_bytes, min(self.max_bytes, size))
+        size = max(self.min_bytes, (size // (256 * 1024)) * (256 * 1024))
+        # Alignment floor LAST: whatever min_bytes the caller configured,
+        # the emitted size is a whole number of FS blocks.
+        return aligned_floor(size, self.align)
 
     def suggest(self, default: int) -> int:
         """Splinter size for the next session; ``default`` until observed."""
         if not self.sessions_observed or self.ema_reader_bps <= 0:
             return default
-        size = self.ema_reader_bps * self.target_splinter_s
-        # Steal pressure shrinks the unit: at >=50% stolen splinters the
-        # size bottoms out at a quarter of the throughput-derived target.
-        shrink = 1.0 - 1.5 * min(self.ema_steal_frac, 0.5)
-        size = int(size * shrink)
-        size = max(self.min_bytes, min(self.max_bytes, size))
-        return max(self.min_bytes, (size // (256 * 1024)) * (256 * 1024))
+        return self._size_from(self.ema_reader_bps, self.ema_steal_frac)
+
+    def suggest_per_reader(
+        self, num_readers: int, default: int
+    ) -> Optional[List[int]]:
+        """Per-stripe splinter sizes for the next ``num_readers``-reader
+        session, or ``None`` before any per-reader signal exists (the plan
+        then uses the scalar ``suggest`` size everywhere)."""
+        if not self.sessions_observed or not self.per_reader:
+            return None
+        base = self.suggest(default)
+        out: List[int] = []
+        for r in range(num_readers):
+            st = self.per_reader.get(r)
+            if st is None or st.bps <= 0:
+                out.append(base)
+            else:
+                out.append(self._size_from(st.bps, st.steal_frac))
+        return out

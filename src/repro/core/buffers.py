@@ -30,9 +30,11 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.metrics import SessionMetrics
+from repro.core.metrics import LocalityMetrics, SessionMetrics
+from repro.core.placement import Topology
 from repro.core.scheduler import TaskScheduler
 from repro.io.layout import StripePlan, Splinter, splinters_covering
+from repro.io.numa import first_touch, pin_thread_to_cpus
 from repro.io.posix import PosixFile
 
 
@@ -49,10 +51,21 @@ class ReaderOptions:
     network: Optional["NetworkModel"] = None
     # per-piece delivery timing sample rate (0 = off; N = every Nth piece)
     piece_timing_every: int = 0
-    # Zero-fill the arena up front instead of faulting pages in lazily
-    # during the first preadv. Off by default (a full memset pass of the
-    # session sat on the start critical path); useful for NUMA first-touch
-    # placement studies, and used by benchmarks to reproduce the seed path.
+    # PE -> NUMA-domain model (core/placement.py). Enables domain-coalesced
+    # pieces, cross-domain delivery accounting, and — with prefault_arena —
+    # per-stripe first-touch on the owning reader's thread.
+    topology: Optional[Topology] = None
+    # Pin each reader I/O thread to the host CPUs of its stripe's NUMA
+    # domain (requires a topology with a CPU map, e.g. Topology.detect).
+    # Best-effort; outcomes are counted in LocalityMetrics.
+    numa_pin: bool = False
+    # Arena prefault policy. Without a topology this reproduces the seed's
+    # up-front zero-fill (a full memset on the start critical path — used by
+    # benchmarks as the legacy "before"). WITH a topology it becomes the
+    # NUMA first-touch hook instead: each reader thread faults its own
+    # stripe's pages (one byte per page, on its own — optionally pinned —
+    # thread) before reading, so first-touch places every stripe on its
+    # reader's domain without defeating the non-zero-filled np.empty arena.
     prefault_arena: bool = False
 
 
@@ -163,10 +176,13 @@ class BufferReaderSet:
         # anyway, and for multi-GB sessions the zero-fill pass dominated
         # session start (it sat on the critical path of the first request).
         self._arena: np.ndarray = np.empty(plan.nbytes, dtype=np.uint8)
-        if opts.prefault_arena:
-            # Explicit memset: np.zeros would calloc lazily-zeroed pages
-            # without touching them — fill() actually faults every page in
-            # (first-touch) and reproduces the seed's bytearray zero-fill.
+        self.locality = LocalityMetrics()
+        if opts.prefault_arena and opts.topology is None:
+            # Legacy (topology-blind) prefault — explicit memset: np.zeros
+            # would calloc lazily-zeroed pages without touching them —
+            # fill() actually faults every page in and reproduces the
+            # seed's bytearray zero-fill. With a topology, prefault happens
+            # per stripe on the reader threads instead (_thread_setup).
             self._arena.fill(0)
         self._base = plan.offset
 
@@ -192,6 +208,15 @@ class BufferReaderSet:
             list(plan.splinters_for_reader(r)) for r in range(plan.num_readers)
         ]
         self._threads: List[threading.Thread] = []
+        # NUMA setup gate: count of reader threads whose _thread_setup has
+        # not finished. While nonzero, work STEALING is disabled — a steal
+        # is the only cross-thread read, and a stolen splinter read before
+        # its owner's page-stride first-touch would be corrupted by the
+        # touch landing afterwards. Own-stripe reads are always safe (each
+        # thread touches its stripes before its first read), so this gate
+        # closes the hazard without a start barrier: no timeout, no
+        # broken-barrier window, regardless of thread scheduling.
+        self._setup_pending = 0
         self._cancelled = False
         self._complete_evt = threading.Event()
         if not plan.splinters:
@@ -212,6 +237,13 @@ class BufferReaderSet:
         nthreads = min(
             max(1, self.plan.num_readers), max(1, self.opts.max_io_threads)
         )
+        if self.opts.topology is not None and (
+                self.opts.prefault_arena or self.opts.numa_pin):
+            # Defer stealing until every thread's pin+first-touch setup is
+            # done (see _setup_pending). Setup is microseconds (a syscall
+            # + strided writes), so the gate lifts as soon as the last
+            # thread is scheduled.
+            self._setup_pending = nthreads
         self.metrics.session_started(self.plan.nbytes, self.plan.num_readers)
         if self.plan.nbytes:
             # Kick kernel readahead for the whole session before the first
@@ -274,22 +306,89 @@ class BufferReaderSet:
             for r in range(tid, self.plan.num_readers, nthreads):
                 if self._pending[r]:
                     return self._pending[r].pop(0)
-            if self.opts.work_stealing:
+            if self.opts.work_stealing and self._setup_pending == 0:
                 victim = max(
                     range(self.plan.num_readers),
                     key=lambda r: len(self._pending[r]),
                     default=None,
                 )
                 if victim is not None and self._pending[victim]:
-                    self.metrics.steals += 1
+                    self.metrics.record_steal(victim)
                     return self._pending[victim].pop()  # steal from the tail
         return None
 
+    def _thread_setup(self, tid: int, nthreads: int) -> None:
+        """Per-I/O-thread NUMA placement, before the first read.
+
+        With a topology: first-touch-fault the pages of every stripe this
+        thread owns (``prefault_arena``) — with ``numa_pin``, pinned to
+        *that stripe's* domain CPUs while touching it (a thread can own
+        stripes in several domains when the pool is smaller than the
+        reader count; re-pinning per domain is a cheap syscall and it is
+        the touch-time affinity that decides first-touch placement), then
+        settle on the primary stripe's domain for the read loop. Under
+        Linux first-touch each stripe's memory thus lands on its own
+        domain, one byte written per page, never a whole-arena zero-fill.
+        Stolen splinters later read into already-placed pages, so
+        straggler stealing cannot scatter a stripe across domains.
+        """
+        topo = self.opts.topology
+        if topo is None:
+            return
+        owned = range(tid, self.plan.num_readers, nthreads)
+        if not len(owned):
+            return
+        pinned_dom = [None]
+        pin_outcomes: List[bool] = []
+
+        def pin_to(dom: int) -> None:
+            if not self.opts.numa_pin or dom == pinned_dom[0]:
+                return
+            cpus = topo.cpus_of_domain(dom)
+            pin_outcomes.append(bool(cpus) and pin_thread_to_cpus(cpus))
+            pinned_dom[0] = dom
+        if self.opts.prefault_arena:
+            for r in owned:
+                lo, hi = self.plan.stripe_bounds[r]
+                if hi > lo:
+                    pin_to(self.reader_domain(r))
+                    pages = first_touch(
+                        self._arena[lo - self._base: hi - self._base])
+                    self.locality.record_prefault(pages)
+        pin_to(self.reader_domain(owned[0]))   # read-loop affinity
+        if pin_outcomes:
+            # One record per THREAD (the counter's name and the verify
+            # docs read it as a thread count): success only if every
+            # re-pin along the way (one per owned domain) succeeded.
+            self.locality.record_pin(all(pin_outcomes))
+
     def _reader_main(self, tid: int, nthreads: int) -> None:
+        gated = self._setup_pending > 0     # set before threads start
+        if gated:
+            try:
+                self._thread_setup(tid, nthreads)
+            finally:
+                with self._lock:
+                    self._setup_pending -= 1
         while not self._cancelled:
             sp = self._next_splinter(tid, nthreads)
             if sp is None:
-                return
+                if not self.opts.work_stealing:
+                    return            # own stripes drained; nothing to steal
+                with self._lock:
+                    has_work = any(self._pending)
+                    gated = self._setup_pending > 0
+                if not has_work:
+                    return
+                # Unclaimed splinters remain. Either stealing is still
+                # setup-gated (spin briefly — the gate lifts within
+                # microseconds of the last thread being scheduled) or the
+                # gate lifted between our failed pop and this check —
+                # retry immediately rather than exiting and silently
+                # leaving the session without a thief.
+                if gated:
+                    time.sleep(0.0005)
+                continue
             if self.opts.delay_model is not None:
                 d = self.opts.delay_model(sp.reader, sp)
                 if d > 0:
@@ -304,6 +403,11 @@ class BufferReaderSet:
                     f"short read: wanted {sp.nbytes} at {sp.offset}, got {n}"
                 )
             self.metrics.record_read(sp.reader, sp.nbytes, dt)
+            if self.opts.topology is not None:
+                # Splinter-size histogram (per-reader sizing observable);
+                # skipped without a topology to keep the default read loop
+                # free of the extra lock acquisition.
+                self.locality.record_splinter(sp.reader, sp.nbytes)
             self._mark_done(sp)
 
     def _mark_done(self, sp: Splinter) -> None:
@@ -444,3 +548,24 @@ class BufferReaderSet:
 
     def reader_node(self, r: int) -> int:
         return self.sched.node_of(self.reader_pes[r])
+
+    def reader_domain(self, r: int) -> int:
+        """NUMA domain of reader ``r``'s PE (node granularity when no
+        topology is configured — one memory domain per address space)."""
+        pe = self.reader_pes[r]
+        topo = self.opts.topology
+        return topo.domain_of(pe) if topo is not None else \
+            self.sched.node_of(pe)
+
+    def reader_locality(self, r: int) -> Tuple[int, int]:
+        """(node, domain) of reader ``r`` — the piece-coalescing key.
+
+        Keyed on both so coalescing never merges across a scheduler node
+        even when the topology's domain grid does not nest inside the
+        node grid (a merged piece is attributed to its first reader, so a
+        node-spanning merge would skip the NetworkModel transfer and
+        miscount cross-node bytes for the tail of the piece)."""
+        pe = self.reader_pes[r]
+        topo = self.opts.topology
+        node = self.sched.node_of(pe)
+        return (node, topo.domain_of(pe) if topo is not None else node)

@@ -17,6 +17,7 @@ from typing import Callable, Dict, List, Optional
 from repro.core.assembler import ReadAssembler
 from repro.core.buffers import BufferReaderSet
 from repro.core.futures import CkCallback
+from repro.core.metrics import LocalityMetrics, SessionMetrics
 from repro.core.placement import place_readers
 from repro.core.scheduler import TaskScheduler
 from repro.core.session import FileHandle, FileOptions, Session
@@ -62,6 +63,17 @@ class Director:
         self.splinter_sizer = SplinterSizer()
         self._observers = [self.tuner.record_session,
                            self.splinter_sizer.record_session]
+        # Director-lifetime locality aggregate: each closing session's
+        # per-session LocalityMetrics are merged here (cross-domain bytes,
+        # per-reader splinter histograms) so benchmarks/drivers can read
+        # one object after many sessions.
+        self.locality = LocalityMetrics()
+
+    def add_observer(self, observe: Callable[[SessionMetrics], None]) -> None:
+        """Register a session-close observer on the shared observation path
+        (it receives every finished session's ``SessionMetrics``, exactly
+        like the AutoTuner and SplinterSizer)."""
+        self._observers.append(observe)
 
     # -- files ---------------------------------------------------------------
     def open_file(
@@ -108,16 +120,23 @@ class Director:
                 # read kick-off of concurrent sessions on distinct files.
                 self._sequence_lock.acquire()
             splinter_bytes = opts.splinter_bytes
+            reader_sizes = None
             if opts.adaptive_splinters:
                 # Dynamic sizing: observed per-reader throughput (large on
                 # streaming stripes) shrunk by steal pressure (small near
                 # stolen tails); opts.splinter_bytes seeds the first session.
+                # Per-reader sizes (once per-stripe signal exists) let a
+                # straggling stripe alone run fine splinters.
                 splinter_bytes = self.splinter_sizer.suggest(splinter_bytes)
+                reader_sizes = self.splinter_sizer.suggest_per_reader(
+                    max(1, num_readers), splinter_bytes)
             plan = plan_session(
-                offset, nbytes, num_readers, splinter_bytes=splinter_bytes
+                offset, nbytes, num_readers, splinter_bytes=splinter_bytes,
+                reader_splinter_bytes=reader_sizes,
             )
             reader_pes = place_readers(
-                opts.placement, plan.num_readers, self.sched, consumer_pes
+                opts.placement, plan.num_readers, self.sched, consumer_pes,
+                topology=opts.topology,
             )
             with self._lock:
                 sid = next(self._session_ids)
@@ -167,6 +186,7 @@ class Director:
             # later-registered observer see identical metrics).
             for observe in self._observers:
                 observe(session.metrics)
+            self.locality.merge(session.readers.locality)
             session.readers.cancel()
             # Enforce the borrowed-view contract: views handed out by
             # read(dest=None) die with the session.

@@ -31,6 +31,11 @@ class SessionMetrics:
     bytes_read: int = 0
     read_time_s: float = 0.0          # summed per-call wall time (across threads)
     bytes_per_reader: Dict[int, int] = field(default_factory=dict)
+    # per-reader breakdowns (keyed by *planned owner*, i.e. stripe index):
+    # the straggler signals the per-reader SplinterSizer consumes.
+    read_time_per_reader: Dict[int, float] = field(default_factory=dict)
+    reads_per_reader: Dict[int, int] = field(default_factory=dict)
+    steals_from_reader: Dict[int, int] = field(default_factory=dict)
     steals: int = 0
     # phase-2 (permutation/delivery) accounting
     pieces_served: int = 0
@@ -58,6 +63,21 @@ class SessionMetrics:
             self.t_last_read = time.perf_counter()
             self.bytes_per_reader[reader] = (
                 self.bytes_per_reader.get(reader, 0) + nbytes
+            )
+            self.read_time_per_reader[reader] = (
+                self.read_time_per_reader.get(reader, 0.0) + dt
+            )
+            self.reads_per_reader[reader] = (
+                self.reads_per_reader.get(reader, 0) + 1
+            )
+
+    def record_steal(self, victim: int) -> None:
+        """One splinter stolen from reader ``victim``'s pending queue —
+        the per-reader straggler-pressure signal."""
+        with self.lock:
+            self.steals += 1
+            self.steals_from_reader[victim] = (
+                self.steals_from_reader.get(victim, 0) + 1
             )
 
     def should_time_piece(self) -> bool:
@@ -243,6 +263,116 @@ class StreamMetrics:
                 "step_time_s": self.step_time_s,
                 "read_time_s": self.read_time_s,
                 "overlap_fraction": frac,
+            }
+
+
+@dataclass
+class LocalityMetrics:
+    """Memory-locality accounting for the topology-aware reader runtime.
+
+    One instance per ``BufferReaderSet`` (merged into a Director-lifetime
+    aggregate on session close), proving — not assuming — the locality
+    levers:
+
+    * ``same_domain_bytes`` / ``cross_domain_bytes`` — delivered piece
+      bytes split by whether the owning reader's NUMA domain matches the
+      consuming PE's domain. Recorded **only when a Topology is
+      configured** — topology-less runs keep their locality signal in
+      ``SessionMetrics.cross_node_bytes`` (node granularity), and these
+      counters stay 0. Cross-domain bytes are what NUMA-aware placement
+      (``near_consumers``/``domain_spread`` + domain-coalesced pieces)
+      exists to reduce; ``benchmarks/perf_numa.py`` gates on them.
+    * per-reader splinter histograms — splinter-size → count per reader,
+      the observable of per-reader adaptive sizing (a straggling stripe
+      alone showing fine splinters).
+    * ``prefault_pages`` — arena pages first-touch-faulted by reader
+      threads on their own domain (the ``prefault_arena`` NUMA hook);
+      ``pinned_threads`` / ``pin_failures`` — ``numa_pin`` outcomes.
+    """
+
+    lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    same_domain_bytes: int = 0
+    cross_domain_bytes: int = 0
+    pieces_same_domain: int = 0
+    pieces_cross_domain: int = 0
+    prefault_pages: int = 0
+    pinned_threads: int = 0
+    pin_failures: int = 0
+    # reader -> {splinter_bytes: count}
+    splinter_hist: Dict[int, Dict[int, int]] = field(default_factory=dict)
+
+    def record_delivery(self, nbytes: int, same_domain: bool) -> None:
+        with self.lock:
+            if same_domain:
+                self.same_domain_bytes += nbytes
+                self.pieces_same_domain += 1
+            else:
+                self.cross_domain_bytes += nbytes
+                self.pieces_cross_domain += 1
+
+    def record_splinter(self, reader: int, nbytes: int) -> None:
+        with self.lock:
+            hist = self.splinter_hist.setdefault(reader, {})
+            hist[nbytes] = hist.get(nbytes, 0) + 1
+
+    def record_prefault(self, pages: int) -> None:
+        with self.lock:
+            self.prefault_pages += pages
+
+    def record_pin(self, ok: bool) -> None:
+        with self.lock:
+            if ok:
+                self.pinned_threads += 1
+            else:
+                self.pin_failures += 1
+
+    def merge(self, other: "LocalityMetrics") -> None:
+        """Fold ``other`` (a finished session's counters) into this one."""
+        with other.lock:
+            snap = (
+                other.same_domain_bytes, other.cross_domain_bytes,
+                other.pieces_same_domain, other.pieces_cross_domain,
+                other.prefault_pages, other.pinned_threads,
+                other.pin_failures,
+                {r: dict(h) for r, h in other.splinter_hist.items()},
+            )
+        with self.lock:
+            self.same_domain_bytes += snap[0]
+            self.cross_domain_bytes += snap[1]
+            self.pieces_same_domain += snap[2]
+            self.pieces_cross_domain += snap[3]
+            self.prefault_pages += snap[4]
+            self.pinned_threads += snap[5]
+            self.pin_failures += snap[6]
+            for r, h in snap[7].items():
+                hist = self.splinter_hist.setdefault(r, {})
+                for n, c in h.items():
+                    hist[n] = hist.get(n, 0) + c
+
+    # -- derived -------------------------------------------------------------
+    def cross_domain_fraction(self) -> float:
+        with self.lock:
+            total = self.same_domain_bytes + self.cross_domain_bytes
+            return self.cross_domain_bytes / total if total else 0.0
+
+    def reader_splinter_sizes(self) -> Dict[int, List[int]]:
+        """Distinct splinter sizes seen per reader (sorted)."""
+        with self.lock:
+            return {r: sorted(h) for r, h in self.splinter_hist.items()}
+
+    def summary(self) -> Dict[str, float]:
+        frac = self.cross_domain_fraction()
+        with self.lock:
+            return {
+                "same_domain_bytes": float(self.same_domain_bytes),
+                "cross_domain_bytes": float(self.cross_domain_bytes),
+                "pieces_same_domain": float(self.pieces_same_domain),
+                "pieces_cross_domain": float(self.pieces_cross_domain),
+                "cross_domain_fraction": frac,
+                "prefault_pages": float(self.prefault_pages),
+                "pinned_threads": float(self.pinned_threads),
+                "pin_failures": float(self.pin_failures),
+                "readers_observed": float(len(self.splinter_hist)),
             }
 
 

@@ -6,6 +6,7 @@ from typing import List, Optional
 
 from repro.core.buffers import BufferReaderSet, NetworkModel, ReaderOptions
 from repro.core.metrics import SessionMetrics
+from repro.core.placement import Topology
 from repro.io.layout import StripePlan
 from repro.io.posix import PosixFile
 
@@ -27,7 +28,16 @@ class FileOptions:
     network: Optional[NetworkModel] = None
     delay_model: object = None              # test hook, forwarded to readers
     piece_timing_every: int = 0             # 0 = delivery timing off (hot path)
-    prefault_arena: bool = False            # zero-fill arena up front
+    # PE -> NUMA-domain model (core/placement.py Topology): turns on
+    # domain-coalesced pieces, cross-domain delivery accounting, topology-
+    # aware placement policies, and the first-touch arena prefault.
+    topology: Optional[Topology] = None
+    # Pin reader I/O threads to their stripe's domain CPUs (needs a
+    # topology with a CPU map, e.g. Topology.detect; best-effort).
+    numa_pin: bool = False
+    # Without a topology: zero-fill the arena up front (legacy seed path).
+    # With a topology: per-stripe first-touch on the owning reader thread.
+    prefault_arena: bool = False
 
     def reader_options(self) -> ReaderOptions:
         return ReaderOptions(
@@ -37,6 +47,8 @@ class FileOptions:
             delay_model=self.delay_model,  # type: ignore[arg-type]
             network=self.network,
             piece_timing_every=self.piece_timing_every,
+            topology=self.topology,
+            numa_pin=self.numa_pin,
             prefault_arena=self.prefault_arena,
         )
 
@@ -87,6 +99,11 @@ class Session:
     def arrival_order(self):
         """Splinter completion order (see BufferReaderSet.arrival_order)."""
         return self.readers.arrival_order()
+
+    @property
+    def locality(self):
+        """Per-session memory-locality counters (LocalityMetrics)."""
+        return self.readers.locality
 
     # -- streaming ------------------------------------------------------------
     def subscribe_splinters(self, cb, replay: bool = True) -> int:

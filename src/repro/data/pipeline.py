@@ -76,6 +76,36 @@ consume executable once; the sizer EMA-smooths and 256 KiB-quantizes its
 suggestions so sizes converge after the first few sessions, but a
 latency-critical run should pin ``splinter_bytes`` statically.
 
+Topology-aware reader runtime (``FileOptions.topology`` / ``numa_pin``)
+-----------------------------------------------------------------------
+Passing a ``core.placement.Topology`` in ``file_opts`` turns on the NUMA
+levers under this pipeline (``launch/train.py`` exposes them as
+``--topology`` — ``auto`` detects the host's NUMA nodes from sysfs, an
+integer gives domains-per-node — and ``--numa-pin``):
+
+* **reader placement** sees memory domains: ``placement="near_consumers"``
+  spreads readers over the PEs of the consumers' NUMA domains (this
+  pipeline passes its consumers' PEs to every session), and
+  ``placement="domain_spread"`` puts one reader per domain before doubling
+  up. ``consumer_pes=[...]`` pins this pipeline's consumer clients to
+  specific PEs (default: round-robin over all PEs) — the lever for
+  skewed-consumer locality studies.
+* **first-touch arena contract**: with a topology, ``prefault_arena=True``
+  no longer zero-fills the session arena up front — instead each reader
+  I/O thread faults exactly its own stripe's pages (one byte per page) on
+  its own thread before its first read, with ``numa_pin=True`` pinning
+  that thread to its domain's host CPUs first. Under Linux first-touch,
+  every stripe's memory therefore lands on the domain that reads and
+  serves it; the ``np.empty`` arena stays non-zero-filled (no memset pass
+  on the session-start critical path), and stolen splinters land in
+  already-placed pages. Zero-copy delivery is unchanged: borrowed views
+  alias the same arena; ``bytes_copied`` stays 0.
+* **accounting**: pieces coalesce per NUMA domain and every delivered
+  piece is classified same- vs cross-domain in ``LocalityMetrics``
+  (per-session, merged into ``pipe.ck.director.locality`` as step sessions
+  close) — ``benchmarks/perf_numa.py`` gates on cross-domain bytes
+  dropping under NUMA-aware placement with bit-identical batches.
+
 Lifetime rules:
   * the returned ``(inputs, labels)`` are ordinary JAX device arrays — they
     own their storage and stay valid as long as the caller holds them;
@@ -165,6 +195,7 @@ class CkIOPipeline:
         ckio: Optional[CkIO] = None,
         num_pes: int = 4,
         num_consumers: Optional[int] = None,
+        consumer_pes: Optional[List[int]] = None,
         file_opts: Optional[FileOptions] = None,
         prefetch_depth: int = 2,
         start_step: int = 0,
@@ -193,8 +224,23 @@ class CkIOPipeline:
         # Over-decomposition: consumers default to 4 per PE (paper: apps
         # commonly run 16+ objects/core; tunable independently of readers).
         self.num_consumers = num_consumers or 4 * self.ck.sched.num_pes
+        # consumer_pes pins the consumer clients to specific PEs (cycled)
+        # instead of round-robin over every PE — skewed-consumer layouts
+        # for NUMA locality studies (near_consumers placement then keeps
+        # readers on the consumers' memory domains).
+        if consumer_pes:
+            bad = [p for p in consumer_pes
+                   if not 0 <= p < self.ck.sched.num_pes]
+            if bad:
+                raise ValueError(
+                    f"consumer_pes {bad} out of range "
+                    f"[0,{self.ck.sched.num_pes})")
+            pe_of = lambda i: consumer_pes[i % len(consumer_pes)]  # noqa: E731
+        else:
+            pe_of = lambda i: i % self.ck.sched.num_pes            # noqa: E731
+        self._consumer_pe_of = pe_of
         self.consumers: List[Client] = [
-            self.ck.make_client(pe=i % self.ck.sched.num_pes)
+            self.ck.make_client(pe=pe_of(i))
             for i in range(self.num_consumers)
         ]
         self.zero_copy = zero_copy
@@ -241,7 +287,7 @@ class CkIOPipeline:
         cur = len(self.consumers)
         if num_consumers > cur:
             self.consumers.extend(
-                self.ck.make_client(pe=i % self.ck.sched.num_pes)
+                self.ck.make_client(pe=self._consumer_pe_of(i))
                 for i in range(cur, num_consumers)
             )
         else:
@@ -309,7 +355,11 @@ class CkIOPipeline:
 
                 self.ck.read_notify(
                     session, nbytes, abs_off,
-                    CkCallback(window_resident, pe=0))
+                    CkCallback(window_resident, pe=0),
+                    # The splinter stream classifies this window's bytes
+                    # per event (against the routed consumer's domain);
+                    # the residency probe must not classify them again.
+                    classify_locality=False)
                 return
             # Consumers collectively read disjoint slices of the window.
             n = self.num_consumers

@@ -1,18 +1,34 @@
-"""POSIX file layer: pread-based stripe reads, layout math, writers."""
-from repro.io.posix import PosixFile, write_file, DEFAULT_ALIGN
+"""POSIX file layer: pread-based stripe reads, layout math, NUMA helpers."""
+from repro.io.posix import (
+    PosixFile,
+    write_file,
+    DEFAULT_ALIGN,
+    aligned_floor,
+)
 from repro.io.layout import (
     StripePlan,
     Splinter,
     plan_session,
     pieces_for_range,
 )
+from repro.io.numa import (
+    detect_numa_domains,
+    first_touch,
+    parse_cpulist,
+    pin_thread_to_cpus,
+)
 
 __all__ = [
     "PosixFile",
     "write_file",
     "DEFAULT_ALIGN",
+    "aligned_floor",
     "StripePlan",
     "Splinter",
     "plan_session",
     "pieces_for_range",
+    "detect_numa_domains",
+    "first_touch",
+    "parse_cpulist",
+    "pin_thread_to_cpus",
 ]

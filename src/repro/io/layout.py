@@ -15,9 +15,9 @@ stripes partition the session; every byte belongs to exactly one splinter).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
-from repro.io.posix import DEFAULT_ALIGN
+from repro.io.posix import DEFAULT_ALIGN, aligned_floor
 
 
 @dataclass(frozen=True)
@@ -44,6 +44,10 @@ class StripePlan:
     splinter_bytes: int
     stripe_bounds: Tuple[Tuple[int, int], ...]   # per reader: (abs_start, abs_end)
     splinters: Tuple[Splinter, ...]              # global splinter list
+    # Per-reader adaptive sizing: when set, reader r's stripe was cut into
+    # reader_splinter_bytes[r]-sized splinters (splinter_bytes then only
+    # records the session-level base size). None = uniform splinter_bytes.
+    reader_splinter_bytes: Optional[Tuple[int, ...]] = None
 
     @property
     def end(self) -> int:
@@ -74,6 +78,7 @@ def plan_session(
     num_readers: int,
     splinter_bytes: int = 8 * 1024 * 1024,
     align: int = DEFAULT_ALIGN,
+    reader_splinter_bytes: Optional[Sequence[int]] = None,
 ) -> StripePlan:
     """Partition ``[offset, offset+nbytes)`` into stripes and splinters.
 
@@ -81,11 +86,30 @@ def plan_session(
     session edges; splinters are capped at ``splinter_bytes``. Degenerate
     cases (more readers than bytes) collapse gracefully: trailing readers get
     empty stripes.
+
+    ``reader_splinter_bytes`` (per-reader adaptive sizing) overrides the
+    splinter size per stripe: reader ``r`` reads in
+    ``reader_splinter_bytes[r]`` units — a straggling stripe can run fine
+    splinters (tight steal granularity) while healthy stripes stream large
+    reads. Stripe *bounds* stay a function of ``num_readers`` alone, so
+    per-reader sizes never change which reader owns a byte.
     """
     if nbytes < 0:
         raise ValueError(f"negative session length {nbytes}")
     num_readers = max(1, num_readers)
-    splinter_bytes = max(align, splinter_bytes)
+    # Floor every splinter size to an ``align`` multiple (not just a
+    # minimum): a non-multiple size would put every subsequent splinter
+    # offset in the stripe off the FS block grid — the read-modify-write
+    # amplification the alignment contract exists to prevent. Enforced
+    # here so every caller is covered, not only the SplinterSizer.
+    splinter_bytes = aligned_floor(splinter_bytes, align)
+    if reader_splinter_bytes is not None:
+        if len(reader_splinter_bytes) != num_readers:
+            raise ValueError(
+                f"reader_splinter_bytes has {len(reader_splinter_bytes)} "
+                f"entries for {num_readers} readers")
+        reader_splinter_bytes = tuple(
+            aligned_floor(int(s), align) for s in reader_splinter_bytes)
 
     base = nbytes // num_readers
     # Align the per-reader stripe size up so interior boundaries sit on FS
@@ -106,9 +130,11 @@ def plan_session(
     splinters: List[Splinter] = []
     gidx = 0
     for r, (s, e) in enumerate(bounds):
+        sb = (reader_splinter_bytes[r] if reader_splinter_bytes is not None
+              else splinter_bytes)
         pos = s
         while pos < e:
-            n = min(splinter_bytes, e - pos)
+            n = min(sb, e - pos)
             splinters.append(Splinter(reader=r, index=gidx, offset=pos, nbytes=n))
             gidx += 1
             pos += n
@@ -120,6 +146,7 @@ def plan_session(
         splinter_bytes=splinter_bytes,
         stripe_bounds=tuple(bounds),
         splinters=tuple(splinters),
+        reader_splinter_bytes=reader_splinter_bytes,
     )
 
 

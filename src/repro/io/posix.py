@@ -16,6 +16,15 @@ from dataclasses import dataclass, field
 # possible to avoid read-modify-write amplification on the storage side.
 DEFAULT_ALIGN = 4096
 
+
+def aligned_floor(nbytes: int, align: int = DEFAULT_ALIGN) -> int:
+    """Largest multiple of ``align`` that is <= ``nbytes`` — but never below
+    ``align`` itself. The zero-copy read path plans preadv offsets on
+    splinter boundaries, so every dynamically-chosen splinter size must pass
+    through this floor (a sub-block size would put read offsets off the FS
+    block grid and re-introduce read-modify-write amplification)."""
+    return max(align, (nbytes // align) * align)
+
 # os.preadv reads straight into a caller-provided buffer (no intermediate
 # bytes object); available on Linux/BSD since Python 3.7. When absent we fall
 # back to the allocate-then-copy pread path (also used by benchmarks to

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config, smoke_config
-from repro.core import FileOptions
+from repro.core import CkIO, FileOptions, Topology
 from repro.data import CkIOPipeline, make_token_file
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
@@ -61,6 +61,26 @@ def main() -> None:
                          " reassemble from arrival order on device (implies"
                          " --device-ingest; StreamMetrics in the final"
                          " summary prove the read/staging overlap)")
+    ap.add_argument("--topology", default=None,
+                    help="NUMA topology for the reader runtime: 'auto'"
+                         " detects the host's NUMA nodes from sysfs (with"
+                         " CPU sets for --numa-pin); an integer subdivides"
+                         " each logical node into that many memory domains."
+                         " Enables domain-coalesced pieces, cross-domain"
+                         " delivery accounting, and first-touch arena"
+                         " striping (each reader thread faults its own"
+                         " stripe's pages on its own domain)")
+    ap.add_argument("--numa-pin", action="store_true",
+                    help="pin each reader I/O thread to the host CPUs of"
+                         " its stripe's NUMA domain (requires --topology"
+                         " auto for the CPU map; best-effort — outcomes"
+                         " are counted in the locality summary)")
+    ap.add_argument("--placement", default="node_spread",
+                    choices=["round_robin", "node_spread", "domain_spread",
+                             "near_consumers"],
+                    help="reader->PE placement policy (core/placement.py);"
+                         " near_consumers/domain_spread use --topology"
+                         " when given")
     ap.add_argument("--adaptive-splinters", action="store_true",
                     help="size splinters per session from observed"
                          " per-reader throughput + steal pressure"
@@ -68,6 +88,9 @@ def main() -> None:
                          " --streaming each size change retraces the fused"
                          " ingest once until the EMA converges")
     args = ap.parse_args()
+    if args.numa_pin and not args.topology:
+        ap.error("--numa-pin requires --topology (the topology supplies "
+                 "the domain->CPU map; without it nothing would be pinned)")
     if args.streaming:
         args.device_ingest = True
 
@@ -83,11 +106,23 @@ def main() -> None:
     if not os.path.exists(args.data):
         print(f"writing synthetic corpus: {need} tokens")
         make_token_file(args.data, need, cfg.vocab_size)
+    # One host: a single scheduler node of num_pes PEs, so the NUMA
+    # topology's node grid matches the scheduler's (a mismatched grid is
+    # rejected by place_readers at session start).
+    num_pes = 4
+    ckio = CkIO(num_pes=num_pes, pes_per_node=num_pes)
+    topology = (Topology.from_spec(args.topology, num_pes=num_pes,
+                                   pes_per_node=num_pes)
+                if args.topology else None)
     pipe = CkIOPipeline(
         args.data, args.global_batch, args.seq,
-        num_pes=4, num_consumers=args.num_consumers,
+        ckio=ckio, num_consumers=args.num_consumers,
         file_opts=FileOptions(num_readers=args.num_readers,
-                              adaptive_splinters=args.adaptive_splinters),
+                              adaptive_splinters=args.adaptive_splinters,
+                              placement=args.placement,
+                              topology=topology,
+                              numa_pin=args.numa_pin,
+                              prefault_arena=topology is not None),
         streaming=args.streaming,
     )
 
@@ -148,6 +183,8 @@ def main() -> None:
         "sched_tasks": summary.sched.stats,
         "ingest": pipe.ingest.summary(),
         "stream": pipe.stream.summary() if args.streaming else None,
+        "locality": (summary.director.locality.summary()
+                     if topology is not None else None),
     }, indent=2))
 
 

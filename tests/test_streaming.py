@@ -380,8 +380,12 @@ def test_streaming_overlap_metrics_invariants(corpus):
     assert sm["inflight_bytes_hwm"] <= budget
     assert sm["mean_stage_latency_s"] <= sm["max_stage_latency_s"]
     assert sm["splinters_staged"] == sm["stage_chunks"]  # one chunk each
-    assert pipe.stream.inflight_bytes == 0      # all retired after fetches
     pipe.close()
+    # Balance invariant: every staged transfer retired its in-flight
+    # accounting by teardown. (Checking before close is racy by design:
+    # a *prefetched* step's splinter staged during the last fetch's pump
+    # is legitimately still in flight — that overlap is the feature.)
+    assert pipe.stream.inflight_bytes == 0
 
 
 def test_streaming_mid_stream_resize_and_migration(corpus):
