@@ -92,6 +92,14 @@ def perf_numa() -> None:
     m.run(quick=common.QUICK)
 
 
+def perf_shm() -> None:
+    # Writes BENCH_shm.json at the repo root (multi-process reader backend:
+    # shared-memory arena drain vs copy-through-pipe baseline, consumer-side
+    # bytes_copied == 0, process/thread bit-identity).
+    from benchmarks import perf_shm as m
+    m.run(quick=common.QUICK)
+
+
 ALL = [
     fig1_naive_overdecomposition,
     fig2_disk_vs_network,
@@ -106,6 +114,7 @@ ALL = [
     perf_device_ingest,
     perf_streaming,
     perf_numa,
+    perf_shm,
 ]
 
 

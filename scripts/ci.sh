@@ -20,8 +20,13 @@
 #                                            (cross-domain delivery bytes
 #                                            drop, zero-copy + bit-identity
 #                                            preserved)
+#   benchmarks/perf_shm.py --quick           multi-process reader backend
+#                                            (shm arena drain >= 1.2x the
+#                                            copy-through-pipe baseline,
+#                                            consumer bytes_copied == 0,
+#                                            process/thread bit-identity)
 # Coverage floor: line coverage of src/repro/core + src/repro/data +
-# src/repro/io over the core/data-focused tests must stay >= the floor in
+# src/repro/io + src/repro/ipc over the core/data-focused tests must stay >= the floor in
 # scripts/coverage_floor.py (stdlib settrace fallback — no third-party deps
 # required).
 set -euo pipefail
@@ -42,7 +47,10 @@ python benchmarks/perf_streaming.py --quick
 echo "== numa benchmark (smoke, cross-domain locality + equivalence) =="
 python benchmarks/perf_numa.py --quick
 
-echo "== coverage floor (core + data + io) =="
+echo "== shm / multi-process backend benchmark (smoke) =="
+python benchmarks/perf_shm.py --quick
+
+echo "== coverage floor (core + data + io + ipc) =="
 python scripts/coverage_floor.py
 
 echo "== ci OK =="

@@ -7,9 +7,11 @@ from repro.core.autotune import AutoTuner, SplinterSizer, suggest_num_readers
 from repro.core.buffers import (
     BufferReaderSet,
     NetworkModel,
+    ProcessReaderSet,
     ReaderOptions,
     SplinterEvent,
 )
+from repro.ipc.worker import WorkerCrashed
 from repro.core.futures import CkCallback, CkFuture
 from repro.core.migration import Client, LocationManager, VirtualProxy
 from repro.core.placement import Topology, place_readers
@@ -33,6 +35,8 @@ __all__ = [
     "suggest_num_readers",
     "BufferReaderSet",
     "NetworkModel",
+    "ProcessReaderSet",
+    "WorkerCrashed",
     "ReaderOptions",
     "SplinterEvent",
     "StreamMetrics",

@@ -68,7 +68,14 @@ def _to_cb(cb: Union[CkCallback, CkFuture, None], default_pe: int = 0) -> CkCall
     if isinstance(cb, CkCallback):
         return cb
     if isinstance(cb, CkFuture):
-        return CkCallback(lambda *a: cb.set(a[0] if a else None), inline=True)
+        wrapped = CkCallback(lambda *a: cb.set(a[0] if a else None),
+                             inline=True)
+        # Error channel for the assembler: a session failure (process
+        # backend worker crash) is routed to ``set_error`` on the future
+        # itself, so ``wait`` raises the descriptive error instead of
+        # timing out.
+        wrapped.future = cb
+        return wrapped
     if cb is None:
         return CkCallback(lambda *a: None, inline=True)
     raise TypeError(f"expected CkCallback/CkFuture/None, got {type(cb)}")

@@ -59,17 +59,26 @@ class ReadComplete:
 
 
 class _RequestState:
-    __slots__ = ("outstanding", "lock", "t0")
+    __slots__ = ("outstanding", "lock", "t0", "failed")
 
     def __init__(self, n: int):
         self.outstanding = n
         self.lock = threading.Lock()
         self.t0 = time.perf_counter()
+        self.failed = False
 
     def piece_done(self) -> bool:
         with self.lock:
             self.outstanding -= 1
-            return self.outstanding == 0
+            return self.outstanding == 0 and not self.failed
+
+    def mark_failed(self) -> bool:
+        """First piece-waiter to report a session failure wins — the
+        request surfaces its error exactly once."""
+        with self.lock:
+            first = not self.failed
+            self.failed = True
+            return first
 
 
 def _as_byteview(buf: Any) -> memoryview:
@@ -129,6 +138,31 @@ class ReadAssembler:
             plan, abs_off, nbytes, coalesce_key=readers.reader_locality
         )
         state = _RequestState(len(pieces))
+
+        def fail_request(exc: BaseException) -> None:
+            """Session died before this request's data landed (process
+            backend worker crash): surface the error exactly once per
+            request — through the caller's future when there is one
+            (``read_sync`` and friends raise it from their wait).
+            Future-less requests (plain callbacks, ``read_notify``) share
+            ONE raising task per session (``claim_error_surface``): it
+            unblocks the waiting pump, and capping it keeps failed
+            fan-outs from littering the queue with tasks that would
+            re-raise out of unrelated later pumps."""
+            if not state.mark_failed():
+                return
+            fut = getattr(after_read, "future", None)
+            if fut is not None:
+                fut.set_error(exc)
+                return
+            if not session.readers.claim_error_surface():
+                return
+
+            def raise_error() -> None:
+                raise exc
+
+            self.sched.enqueue(self.pe, raise_error, label="ckio-read-error")
+
         net = session.opts.network
         my_node = self.sched.node_of(self.pe)
         topo = session.opts.topology
@@ -175,6 +209,7 @@ class ReadAssembler:
                     cross,
                     (time.perf_counter() - t0) if timed else None,
                     copied=copied,
+                    borrowed=zero_copy,
                 )
                 if my_domain is not None:
                     readers.locality.record_delivery(p_len, not cross_domain)
@@ -184,11 +219,16 @@ class ReadAssembler:
             def on_available() -> None:
                 # Runs on an I/O thread (or inline if data already resident):
                 # model the buffer→client transfer, then enqueue the delivery
-                # as a task on this PE.
+                # as a task on this PE. Borrowed-view (zero-copy) pieces skip
+                # the model: the client receives a view of the arena — same
+                # address space, or the mapped shm segment under the process
+                # backend — so no bytes cross a node; modeling a transfer
+                # AND reporting a zero-copy delivery would double-count the
+                # piece (its locality lands in cross_node_view_bytes).
                 enqueue = lambda: self.sched.enqueue(  # noqa: E731
                     self.pe, deliver_on_pe, label="ckio-piece"
                 )
-                if net is not None:
+                if net is not None and not zero_copy:
                     net.deliver(p_len, not cross, enqueue)
                 else:
                     enqueue()
@@ -205,5 +245,6 @@ class ReadAssembler:
         with self.sched.batch():
             for reader, p_off, p_len in pieces:
                 readers.when_available(
-                    p_off, p_len, make_piece_handler(reader, p_off, p_len)
+                    p_off, p_len, make_piece_handler(reader, p_off, p_len),
+                    on_error=fail_request,
                 )

@@ -23,6 +23,7 @@ Fig. 12); by default delivery is an immediate zero-copy memoryview hand-off.
 from __future__ import annotations
 
 import heapq
+import os
 import threading
 import time
 from dataclasses import dataclass, field
@@ -36,6 +37,18 @@ from repro.core.scheduler import TaskScheduler
 from repro.io.layout import StripePlan, Splinter, splinters_covering
 from repro.io.numa import first_touch, pin_thread_to_cpus
 from repro.io.posix import PosixFile
+from repro.ipc.ring import (
+    PIN_NONE,
+    PIN_OK,
+    ST_DONE,
+    ST_ERROR,
+    ST_INIT,
+    EventRing,
+    RingEvent,
+    ring_bytes,
+)
+from repro.ipc.shm import SharedArena
+from repro.ipc.worker import WorkerCrashed, WorkerSpec, worker_main
 
 
 @dataclass
@@ -45,7 +58,28 @@ class ReaderOptions:
     splinter_bytes: int = 8 * 1024 * 1024
     work_stealing: bool = True
     max_io_threads: int = 64
+    # Reader backend: "thread" (helper I/O threads in this process — the
+    # default) or "process" (one OS worker process per reader group reading
+    # into a shared-memory arena, events over a cross-process ring —
+    # ProcessReaderSet below; src/repro/ipc/).
+    backend: str = "thread"
+    # process backend: cap on spawned worker processes (readers are split
+    # across them the way threads split readers in the thread backend).
+    max_workers: int = 8
+    # process backend: per-worker event-ring capacity (slots). A full ring
+    # throttles its worker (backoff), never drops events.
+    ring_slots: int = 512
+    # process backend: picklable test hook run before each splinter read in
+    # the worker ((reader, splinter_index) -> None; may raise or _exit) —
+    # crash-path injection (repro.ipc.worker.ExitAfter / RaiseAfter).
+    worker_fault: Optional[object] = None
+    # process backend: seconds to wait for spawned workers to attach
+    # (interpreter start + numpy import) before failing the session.
+    worker_attach_timeout: float = 120.0
+    # process backend: graceful-drain join timeout before SIGKILL.
+    worker_stop_timeout: float = 10.0
     # test/bench hook: seconds of injected delay before reading a splinter
+    # (process backend: must be picklable — see repro.ipc.worker.StallReader)
     delay_model: Optional[Callable[[int, Splinter], float]] = None
     # optional cross-node transfer model (None = immediate hand-off)
     network: Optional["NetworkModel"] = None
@@ -127,6 +161,10 @@ class NetworkModel:
 class _Waiter:
     remaining: int
     fire: Callable[[], None]
+    # Error channel: invoked (as a scheduler task) with the session error
+    # when the backend fails before the awaited range lands. None = no
+    # error path (bench/driver waiters that use join() instead).
+    fail: Optional[Callable[[BaseException], None]] = None
 
 
 @dataclass(frozen=True)
@@ -170,25 +208,24 @@ class BufferReaderSet:
         if opts.piece_timing_every:
             self.metrics.piece_timing_every = opts.piece_timing_every
 
-        # Session storage: stripes are slices of one arena. Readers fill it;
-        # clients get zero-copy memoryviews out of it. np.empty skips the
-        # memset a bytearray would do — every byte is overwritten by preadv
-        # anyway, and for multi-GB sessions the zero-fill pass dominated
-        # session start (it sat on the critical path of the first request).
-        self._arena: np.ndarray = np.empty(plan.nbytes, dtype=np.uint8)
         self.locality = LocalityMetrics()
-        if opts.prefault_arena and opts.topology is None:
-            # Legacy (topology-blind) prefault — explicit memset: np.zeros
-            # would calloc lazily-zeroed pages without touching them —
-            # fill() actually faults every page in and reproduces the
-            # seed's bytearray zero-fill. With a topology, prefault happens
-            # per stripe on the reader threads instead (_thread_setup).
-            self._arena.fill(0)
+        # Session storage: stripes are slices of one arena. Readers fill it;
+        # clients get zero-copy memoryviews out of it. The allocation is a
+        # subclass hook: the process backend substitutes a shared-memory
+        # segment mapped into every worker process (same aliasing contract).
+        self._arena: np.ndarray = self._alloc_arena(plan)
         self._base = plan.offset
 
         self._lock = threading.Lock()
         self._done = [False] * len(plan.splinters)
         self._ndone = 0
+        # Fatal session error (the process backend's worker-crash path sets
+        # it via _fail; the thread backend never does). Checked under
+        # ``_lock`` by when_available so registration and failure are
+        # atomic: a request lands either before a failure (the raising
+        # task unblocks its pump) or raises here — never in between.
+        self.error: Optional[BaseException] = None
+        self._error_surfaced = False   # one bare raising task per session
         # Global splinter ids in completion order — the staging order a
         # streamed (per-splinter) host→device path would see; consumed by
         # the device-ingest index-map construction (data/packing.py).
@@ -225,6 +262,21 @@ class BufferReaderSet:
         # Borrowed read-only views handed to zero-copy clients; released
         # (invalidated) when the session closes.
         self._borrows: List[memoryview] = []
+
+    def _alloc_arena(self, plan: StripePlan) -> np.ndarray:
+        """Allocate the session arena (subclass hook). np.empty skips the
+        memset a bytearray would do — every byte is overwritten by preadv
+        anyway, and for multi-GB sessions the zero-fill pass dominated
+        session start (it sat on the critical path of the first request)."""
+        arena = np.empty(plan.nbytes, dtype=np.uint8)
+        if self.opts.prefault_arena and self.opts.topology is None:
+            # Legacy (topology-blind) prefault — explicit memset: np.zeros
+            # would calloc lazily-zeroed pages without touching them —
+            # fill() actually faults every page in and reproduces the
+            # seed's bytearray zero-fill. With a topology, prefault happens
+            # per stripe on the reader threads instead (_thread_setup).
+            arena.fill(0)
+        return arena
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> None:
@@ -410,7 +462,12 @@ class BufferReaderSet:
                 self.locality.record_splinter(sp.reader, sp.nbytes)
             self._mark_done(sp)
 
-    def _mark_done(self, sp: Splinter) -> None:
+    def _mark_done(self, sp: Splinter, t_arrival: Optional[float] = None) -> None:
+        """Record one splinter completion and fan out waiters/subscribers.
+
+        ``t_arrival`` defaults to now; the process backend passes the
+        worker-side completion timestamp instead (``perf_counter`` is
+        CLOCK_MONOTONIC on Linux — comparable across processes)."""
         to_fire: List[Callable[[], None]] = []
         ev = SplinterEvent(
             index=sp.index,
@@ -418,7 +475,7 @@ class BufferReaderSet:
             offset=sp.offset,
             nbytes=sp.nbytes,
             arena_off=sp.offset - self._base,
-            t_arrival=time.perf_counter(),
+            t_arrival=time.perf_counter() if t_arrival is None else t_arrival,
         )
         # _stream_lock spans the record + delivery so concurrent completions
         # reach every subscriber in the same order they enter ``_events``
@@ -484,7 +541,11 @@ class BufferReaderSet:
 
     # -- client-facing --------------------------------------------------------
     def when_available(
-        self, abs_off: int, nbytes: int, fire: Callable[[], None]
+        self,
+        abs_off: int,
+        nbytes: int,
+        fire: Callable[[], None],
+        on_error: Optional[Callable[[BaseException], None]] = None,
     ) -> None:
         """Invoke ``fire`` once every byte of the range is resident.
 
@@ -492,15 +553,23 @@ class BufferReaderSet:
         If the data is already resident the callback runs immediately in the
         caller — the paper's "request buffered until the I/O is finished"
         semantics, with the buffered case handled by the waiter table.
+
+        ``on_error`` is the failure channel (process backend): if the
+        session dies before the range lands, ``on_error(exc)`` is delivered
+        as a scheduler task instead of ``fire`` — exactly once per waiter.
+        A request arriving after the failure raises synchronously here.
         """
         need = [
             s.index
             for s in splinters_covering(self.plan, abs_off, nbytes)
         ]
         with self._lock:
+            if self.error is not None:
+                raise self.error
             missing = [i for i in need if not self._done[i]]
             if missing:
-                w = _Waiter(remaining=len(missing), fire=fire)
+                w = _Waiter(remaining=len(missing), fire=fire,
+                            fail=on_error)
                 for i in missing:
                     self._waiters_by_splinter.setdefault(i, []).append(w)
                 return
@@ -543,6 +612,24 @@ class BufferReaderSet:
                 pass
         return n
 
+    def claim_error_surface(self) -> bool:
+        """One-shot claim on surfacing this session's error as a *bare
+        raising task* (for failed requests with no future to route the
+        error into). Capped at one per session: the first raising task
+        unblocks whichever pump is waiting, and a second one would linger
+        in the queue to explode out of an unrelated later pump (e.g. the
+        pipeline's teardown flush)."""
+        with self._lock:
+            if self._error_surfaced:
+                return False
+            self._error_surfaced = True
+            return True
+
+    def release(self) -> None:
+        """Free backend resources after the session closed (no-op for the
+        thread backend — the arena is ordinary process memory; the process
+        backend unmaps/unlinks its shared-memory segments here)."""
+
     def reader_pe(self, r: int) -> int:
         return self.reader_pes[r]
 
@@ -569,3 +656,373 @@ class BufferReaderSet:
         topo = self.opts.topology
         node = self.sched.node_of(pe)
         return (node, topo.domain_of(pe) if topo is not None else node)
+
+
+class ProcessReaderSet(BufferReaderSet):
+    """Multi-process reader backend (``FileOptions(backend="process")``).
+
+    The paper's buffer chares as real OS processes: the session arena is a
+    shared-memory segment (``ipc/shm.py``) mapped into every reader worker
+    process (``ipc/worker.py``) and this consumer process; splinter
+    completions cross the process boundary through per-worker
+    sequence-numbered event rings (``ipc/ring.py``) drained by a supervisor
+    poller thread that re-enters the inherited ``_mark_done`` machinery —
+    waiters, the splinter stream (``subscribe``/``read_stream``) and the
+    streaming pipeline consume worker-process events transparently.
+
+    Zero-copy delivery survives the split: ``view``/``borrow_view`` return
+    memoryviews into the *mapped* arena, so ``bytes_copied`` stays 0 in the
+    consumer process. PR-4's NUMA striping carries over: each worker
+    first-touch-faults (and with ``numa_pin`` ``sched_setaffinity``-pins
+    itself to) its own stripes before the supervisor opens the start gate,
+    so domain placement is decided by the owning *process* and pinning
+    spans real CPU sets.
+
+    Lifecycle (the supervisor half of the ``ipc/worker.py`` protocol):
+    ``start`` spawns workers (``spawn`` — no fork of this process's
+    threads/JAX state) + the poller; the poller waits for every worker to
+    attach, records their first-touch/pin reports, unlinks the segment
+    names (mappings keep them alive — after this point a parent crash
+    leaks nothing in ``/dev/shm``: orphaned workers notice the vanished
+    supervisor via the getppid() checks polled in every wait loop and
+    exit, and the last mapping frees the pages; only a SIGKILL landing in
+    the short spawn→attach window can leave named segments behind), opens
+    the gates, then drains rings until the session is complete. A worker that reports ``ERROR`` — or vanishes before
+    ``DONE`` — fails the session fast: ``join``/``wait_attached`` raise,
+    pending waiters are dropped, and a raising task is enqueued so any
+    scheduler-pumping read call surfaces a descriptive :class:`WorkerCrashed`
+    within one poll interval instead of hanging. ``stop``/``cancel``
+    request a graceful drain (workers exit between splinters) and the
+    poller SIGKILLs survivors after ``worker_stop_timeout``.
+
+    Deliberate differences from the thread backend: no work stealing (the
+    pending queues cannot be shared), ``delay_model``/``worker_fault`` must
+    be picklable, and a worker process pins once (its primary stripe's
+    domain) rather than re-pinning per stripe.
+    """
+
+    def __init__(
+        self,
+        file: PosixFile,
+        plan: StripePlan,
+        sched: TaskScheduler,
+        reader_pes: List[int],
+        opts: ReaderOptions,
+        metrics: Optional[SessionMetrics] = None,
+    ):
+        self._shm: Optional[SharedArena] = None
+        super().__init__(file, plan, sched, reader_pes, opts, metrics)
+        self._rings_shm: Optional[SharedArena] = None
+        self._rings: List[EventRing] = []
+        self._procs: List[object] = []
+        self._poller: Optional[threading.Thread] = None
+        self._attached_evt = threading.Event()
+        self._gates_open = False
+
+    def _alloc_arena(self, plan: StripePlan) -> np.ndarray:
+        # Named shm segment instead of private np.empty: ftruncate allocates
+        # lazily, so no page is faulted here — first touch happens in the
+        # worker that owns the stripe (the cross-process analog of PR-4's
+        # per-thread first-touch; the legacy zero-fill prefault does not
+        # apply to this backend).
+        self._shm = SharedArena.create(plan.nbytes, tag="sess")
+        return self._shm.ndarray()
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> None:
+        if self.started:
+            return
+        self.started = True
+        self.metrics.session_started(self.plan.nbytes, self.plan.num_readers)
+        if not self.plan.splinters:
+            self._gates_open = True          # trivially: nothing to attach
+            self._attached_evt.set()
+            return
+        # Readahead from the parent helps too: the page cache is shared
+        # with the workers.
+        self.file.advise_sequential(self.plan.offset, self.plan.nbytes)
+        nworkers = min(self.plan.num_readers, max(1, self.opts.max_workers))
+        rb = ring_bytes(self.opts.ring_slots)
+        self._rings_shm = SharedArena.create(nworkers * rb, tag="rings")
+        region = self._rings_shm.buf
+        topo = self.opts.topology
+        import multiprocessing as mp
+
+        ctx = mp.get_context("spawn")
+        try:
+            self._spawn_workers(ctx, nworkers, rb, region, topo)
+        except BaseException:
+            # Spawn failed (unpicklable delay/fault hook, resource error):
+            # the poller that would normally unlink the named segments and
+            # reap workers will never run — run its teardown here or the
+            # tmpfs names (and any already-started worker) leak forever.
+            self._shutdown_workers()
+            self._procs = []
+            raise
+        self._poller = threading.Thread(
+            target=self._poll_main, daemon=True, name="ckio-ring-poller")
+        self._poller.start()
+
+    def _spawn_workers(self, ctx, nworkers: int, rb: int,
+                       region: memoryview, topo: Optional[Topology]) -> None:
+        for w in range(nworkers):
+            self._rings.append(EventRing(
+                region[w * rb: (w + 1) * rb], self.opts.ring_slots,
+                create=True,
+            ))
+            owned = list(range(w, self.plan.num_readers, nworkers))
+            pin_cpus = None
+            if self.opts.numa_pin and topo is not None and owned:
+                cpus = topo.cpus_of_domain(self.reader_domain(owned[0]))
+                pin_cpus = tuple(cpus) if cpus else None
+            spec = WorkerSpec(
+                worker_id=w,
+                file_path=self.file.path,
+                arena_path=self._shm.path,
+                arena_bytes=self.plan.nbytes,
+                base_offset=self._base,
+                ring_path=self._rings_shm.path,
+                ring_region_bytes=nworkers * rb,
+                ring_offset=w * rb,
+                ring_slots=self.opts.ring_slots,
+                splinters=tuple(
+                    sp for r in owned
+                    for sp in self.plan.splinters_for_reader(r)),
+                stripe_bounds=tuple(
+                    self.plan.stripe_bounds[r] for r in owned),
+                prefault=self.opts.prefault_arena,
+                pin_cpus=pin_cpus,
+                delay_model=self.opts.delay_model,
+                fault=self.opts.worker_fault,
+                parent_pid=os.getpid(),
+            )
+            self._procs.append(ctx.Process(
+                target=worker_main, args=(spec,), daemon=True,
+                name=f"ckio-reader-{w}",
+            ))
+        for p in self._procs:
+            p.start()
+
+    def wait_attached(self, timeout: float = 120.0) -> bool:
+        """Block until every worker has attached + placed its stripes (the
+        supervisor opened the start gates) — the point where drain timing
+        starts in benchmarks. Raises if the session already failed;
+        returns False if it was cancelled (or timed out) before the gates
+        opened, rather than sleeping out the timeout on a torn-down
+        session (cancel and poller exit both wake this event)."""
+        ok = self._attached_evt.wait(timeout)
+        if self.error is not None:
+            raise self.error
+        return ok and self._gates_open
+
+    def cancel(self) -> None:
+        self._cancelled = True
+        for ring in list(self._rings):
+            ring.request_stop()
+        # Wake anyone parked on the attach barrier of a session that will
+        # now never open its gates (wait_attached returns False).
+        self._attached_evt.set()
+
+    def stop(self, timeout: float = 30.0) -> bool:
+        """Graceful drain + join (SIGKILL on timeout happens in the
+        poller's shutdown); True once poller and workers are gone."""
+        self.cancel()
+        th = self._poller
+        if th is not None and th.is_alive():
+            th.join(timeout)
+            if th.is_alive():
+                return False
+        return all(not p.is_alive() for p in self._procs)
+
+    def join(self, timeout: float = 120.0) -> bool:
+        ok = self._complete_evt.wait(timeout)
+        if self.error is not None:
+            raise self.error
+        return ok
+
+    def release(self) -> None:
+        """Unmap/unlink the shm segments once the session is closed.
+
+        Joins the (cancelled) poller first — it owns the ring mappings.
+        The arena unmap is best-effort: any chunk view still pinned by a
+        staged device transfer keeps its pages alive until the exporter
+        dies (the names were already unlinked, so nothing leaks)."""
+        th = self._poller
+        if th is not None and th.is_alive():
+            self.cancel()
+            th.join(self.opts.worker_stop_timeout + 15.0)
+            if th.is_alive():      # stuck worker: leave mappings to GC
+                return
+        if self._shm is not None:
+            # Best-effort: ``self._arena`` still exports the mapping (late
+            # piece-delivery tasks racing the close may read through it,
+            # exactly like the thread backend's arena), so close() here
+            # typically only unlinks; the pages are freed the moment the
+            # last exporter — the session object itself — is dropped.
+            self._shm.close()
+
+    # -- supervisor poller ----------------------------------------------------
+    def _on_ring_event(self, ev: RingEvent) -> None:
+        sp = Splinter(reader=ev.reader, index=ev.index,
+                      offset=ev.offset, nbytes=ev.nbytes)
+        self.metrics.record_read(ev.reader, ev.nbytes, ev.read_dt)
+        if self.opts.topology is not None:
+            self.locality.record_splinter(ev.reader, ev.nbytes)
+        self._mark_done(sp, t_arrival=ev.t_arrival)
+
+    def _fail(self, exc: BaseException) -> None:
+        """Fail the session fast: record the error, unblock every waiter
+        path (join / wait_attached / scheduler pumps) with it."""
+        with self._lock:
+            if self.error is not None:
+                return
+            self.error = exc
+            waiters: List[_Waiter] = []
+            seen = set()
+            for ws in self._waiters_by_splinter.values():
+                for w in ws:
+                    if id(w) not in seen:         # distinct, once each
+                        seen.add(id(w))
+                        waiters.append(w)
+            self._waiters_by_splinter.clear()
+            self._complete_evt.set()
+        self._attached_evt.set()
+
+        def raise_error() -> None:
+            raise exc
+
+        # Every registered waiter gets the error through its own failure
+        # channel (the assembler routes it to the request's future /
+        # callback — exactly once per request), so EVERY blocked caller
+        # fails fast, not just whichever pump pops a task first. A waiter
+        # without an error channel (bench/driver join()-style code) gets a
+        # raising task to unblock its pump. Requests arriving after the
+        # failure raise synchronously in when_available, so nothing is
+        # delivered twice.
+        with self.sched.batch():
+            for w in waiters:
+                if w.fail is not None:
+                    self.sched.enqueue(0, w.fail, exc, label="ckio-read-error")
+                elif self.claim_error_surface():
+                    # Channel-less waiters share one raising task (see
+                    # claim_error_surface).
+                    self.sched.enqueue(0, raise_error,
+                                       label="ckio-worker-error")
+
+    def _worker_label(self, w: int) -> str:
+        ring, p = self._rings[w], self._procs[w]
+        pid = ring.pid() or getattr(p, "pid", None)
+        return f"reader worker {w} (pid {pid})"
+
+    def _poll_main(self) -> None:
+        total = len(self._done)
+        rings, procs = self._rings, self._procs
+        gated = True
+        deadline = time.monotonic() + self.opts.worker_attach_timeout
+        pause = 50e-6
+        try:
+            while not self._cancelled:
+                progressed = 0
+                for ring in rings:
+                    events = ring.consume(limit=1024)
+                    for ev in events:
+                        self._on_ring_event(ev)
+                    progressed += len(events)
+                if gated:
+                    states = [r.state() for r in rings]
+                    if any(st == ST_ERROR for st in states):
+                        # A worker died during attach: do NOT open gates or
+                        # report attachment — fall through to the dead-
+                        # child loop below, which fails the session
+                        # (wait_attached then raises instead of returning
+                        # success on a dying session).
+                        pass
+                    elif all(st != ST_INIT for st in states):
+                        for ring in rings:
+                            pages, pin = ring.touch_report()
+                            if pages:
+                                self.locality.record_prefault(pages)
+                            if pin != PIN_NONE:
+                                self.locality.record_pin(pin == PIN_OK)
+                            ring.open_gate()
+                        # Names are no longer needed (everyone holds a
+                        # mapping): unlink now so nothing leaks in
+                        # /dev/shm even if this process dies.
+                        self._shm.unlink()
+                        self._rings_shm.unlink()
+                        gated = False
+                        self._gates_open = True
+                        self._attached_evt.set()
+                    elif time.monotonic() > deadline:
+                        waiting = [w for w, r in enumerate(rings)
+                                   if r.state() == ST_INIT]
+                        self._fail(WorkerCrashed(
+                            f"reader worker(s) {waiting} failed to attach "
+                            f"within {self.opts.worker_attach_timeout}s"))
+                        return
+                with self._lock:
+                    if self._ndone >= total:
+                        return
+                for w, (p, ring) in enumerate(zip(procs, rings)):
+                    st = ring.state()
+                    if st == ST_ERROR:
+                        self._fail(WorkerCrashed(
+                            f"{self._worker_label(w)} failed: "
+                            f"{ring.error_message()}"))
+                        return
+                    if st != ST_DONE and not p.is_alive():
+                        # Drain anything it published before dying, then
+                        # decide: the session may actually be complete.
+                        for ev in ring.consume():
+                            self._on_ring_event(ev)
+                        with self._lock:
+                            ndone = self._ndone
+                        if ndone >= total:
+                            return
+                        if ring.state() == ST_ERROR:
+                            msg = f"failed: {ring.error_message()}"
+                        else:
+                            msg = (f"exited with code {p.exitcode} before "
+                                   f"completing its splinters "
+                                   f"({ndone}/{total} read)")
+                        self._fail(WorkerCrashed(
+                            f"{self._worker_label(w)} {msg}"))
+                        return
+                if progressed:
+                    pause = 50e-6
+                else:
+                    time.sleep(pause)
+                    pause = min(pause * 2, 2e-3)   # futex-free backoff
+        finally:
+            self._shutdown_workers()
+            # Whatever ended the poll loop, nobody may stay parked on the
+            # attach barrier of a dead session.
+            self._attached_evt.set()
+
+    def _shutdown_workers(self) -> None:
+        """Graceful drain, then SIGKILL-on-timeout; releases ring mappings."""
+        rings, procs = self._rings, self._procs
+        for ring in rings:
+            ring.request_stop()
+        deadline = time.monotonic() + self.opts.worker_stop_timeout
+        # ``p.pid is None`` = never started (spawn aborted mid-loop) —
+        # join/kill on those raise instead of no-op'ing.
+        for p in procs:
+            if p.pid is not None:
+                p.join(max(0.0, deadline - time.monotonic()))
+        for p in procs:
+            if p.pid is not None and p.is_alive():
+                p.kill()
+                p.join(5.0)
+        # Workers are gone: the names can't be needed again. Unlink here
+        # too (idempotent) so a session that failed before the gate opened
+        # still leaves nothing behind in /dev/shm.
+        if self._shm is not None:
+            self._shm.unlink()
+        # Drop the parent-side ring views before closing their mapping (a
+        # live export pins it — close() tolerates stragglers either way).
+        self._rings = []
+        del rings
+        if self._rings_shm is not None:
+            self._rings_shm.close()
+            self._rings_shm = None

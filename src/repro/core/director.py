@@ -15,7 +15,7 @@ import threading
 from typing import Callable, Dict, List, Optional
 
 from repro.core.assembler import ReadAssembler
-from repro.core.buffers import BufferReaderSet
+from repro.core.buffers import BufferReaderSet, ProcessReaderSet
 from repro.core.futures import CkCallback
 from repro.core.metrics import LocalityMetrics, SessionMetrics
 from repro.core.placement import place_readers
@@ -119,45 +119,74 @@ class Director:
                 # Global coordination (paper §III-C.1): serialize the greedy
                 # read kick-off of concurrent sessions on distinct files.
                 self._sequence_lock.acquire()
-            splinter_bytes = opts.splinter_bytes
-            reader_sizes = None
-            if opts.adaptive_splinters:
-                # Dynamic sizing: observed per-reader throughput (large on
-                # streaming stripes) shrunk by steal pressure (small near
-                # stolen tails); opts.splinter_bytes seeds the first session.
-                # Per-reader sizes (once per-stripe signal exists) let a
-                # straggling stripe alone run fine splinters.
-                splinter_bytes = self.splinter_sizer.suggest(splinter_bytes)
-                reader_sizes = self.splinter_sizer.suggest_per_reader(
-                    max(1, num_readers), splinter_bytes)
-            plan = plan_session(
-                offset, nbytes, num_readers, splinter_bytes=splinter_bytes,
-                reader_splinter_bytes=reader_sizes,
-            )
-            reader_pes = place_readers(
-                opts.placement, plan.num_readers, self.sched, consumer_pes,
-                topology=opts.topology,
-            )
-            with self._lock:
-                sid = next(self._session_ids)
-            readers = BufferReaderSet(
-                file.posix, plan, self.sched, reader_pes, opts.reader_options()
-            )
-            session = Session(
-                id=sid,
-                file=file,
-                plan=plan,
-                readers=readers,
-                opts=opts,
-                reader_pes=reader_pes,
-                metrics=readers.metrics,
-            )
-            with self._lock:
-                self.sessions[sid] = session
-            # Greedy prefetch begins NOW — before any client request exists.
-            readers.start()
-            if sequenced:
-                self._sequence_lock.release()
+            sid = None
+            readers = None
+            try:
+                splinter_bytes = opts.splinter_bytes
+                reader_sizes = None
+                if opts.adaptive_splinters:
+                    # Dynamic sizing: observed per-reader throughput (large
+                    # on streaming stripes) shrunk by steal pressure (small
+                    # near stolen tails); opts.splinter_bytes seeds the
+                    # first session. Per-reader sizes (once per-stripe
+                    # signal exists) let a straggling stripe alone run fine
+                    # splinters.
+                    splinter_bytes = self.splinter_sizer.suggest(
+                        splinter_bytes)
+                    reader_sizes = self.splinter_sizer.suggest_per_reader(
+                        max(1, num_readers), splinter_bytes)
+                plan = plan_session(
+                    offset, nbytes, num_readers,
+                    splinter_bytes=splinter_bytes,
+                    reader_splinter_bytes=reader_sizes,
+                )
+                reader_pes = place_readers(
+                    opts.placement, plan.num_readers, self.sched,
+                    consumer_pes, topology=opts.topology,
+                )
+                with self._lock:
+                    sid = next(self._session_ids)
+                # Backend dispatch: same supervisor-facing interface,
+                # different execution substrate (helper threads vs worker
+                # processes over a shared-memory arena — core/buffers.py
+                # ProcessReaderSet).
+                reader_cls = (ProcessReaderSet if opts.backend == "process"
+                              else BufferReaderSet)
+                readers = reader_cls(
+                    file.posix, plan, self.sched, reader_pes,
+                    opts.reader_options()
+                )
+                session = Session(
+                    id=sid,
+                    file=file,
+                    plan=plan,
+                    readers=readers,
+                    opts=opts,
+                    reader_pes=reader_pes,
+                    metrics=readers.metrics,
+                )
+                with self._lock:
+                    self.sessions[sid] = session
+                # Greedy prefetch begins NOW — before any client request
+                # exists.
+                readers.start()
+            except BaseException:
+                # A failed start (e.g. the process backend's spawn
+                # rejecting an unpicklable hook) must not leave a
+                # half-created session in the tables or backend resources
+                # mapped; the exception still propagates to the caller's
+                # pump.
+                if sid is not None:
+                    with self._lock:
+                        self.sessions.pop(sid, None)
+                if readers is not None:
+                    readers.release()
+                raise
+            finally:
+                # Always released — an exception above would otherwise
+                # deadlock every future sequenced session start.
+                if sequenced:
+                    self._sequence_lock.release()
 
             # Broadcast to the Manager group; last ack fires `ready`.
             acks = {"n": 0}
@@ -191,6 +220,9 @@ class Director:
             # Enforce the borrowed-view contract: views handed out by
             # read(dest=None) die with the session.
             session.readers.invalidate_borrows()
+            # Backend teardown (no-op for threads; the process backend
+            # joins its supervisor and unmaps the shm segments here).
+            session.readers.release()
             session.closed = True
             with self._lock:
                 self.sessions.pop(session.id, None)

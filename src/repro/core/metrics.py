@@ -41,7 +41,16 @@ class SessionMetrics:
     pieces_served: int = 0
     bytes_served: int = 0
     bytes_copied: int = 0             # memcpy'd to client buffers (0 = zero-copy)
+    # Cross-node accounting is split by delivery kind so a piece is never
+    # double-counted as both a transfer and a zero-copy delivery:
+    # ``cross_node_bytes`` counts pieces physically copied to a client on
+    # another node (the NetworkModel-modeled transfer); a piece delivered
+    # as a borrowed view — same address space, or the mapped shm arena of
+    # the process backend — moves no bytes and lands in
+    # ``cross_node_view_bytes`` instead (the locality signal survives, the
+    # phantom transfer does not).
     cross_node_bytes: int = 0
+    cross_node_view_bytes: int = 0
     permute_time_s: float = 0.0
     timed_pieces: int = 0             # pieces that contributed to permute_time_s
     piece_timing_every: int = 0       # 0 = timing off; N = time every Nth piece
@@ -94,13 +103,20 @@ class SessionMetrics:
         cross_node: bool,
         dt: Optional[float] = None,
         copied: int = 0,
+        borrowed: bool = False,
     ) -> None:
+        """``borrowed=True`` marks a zero-copy (view) delivery: cross-node
+        bytes then count as ``cross_node_view_bytes`` (no transfer
+        happened), never ``cross_node_bytes``."""
         with self.lock:
             self.pieces_served += 1
             self.bytes_served += nbytes
             self.bytes_copied += copied
             if cross_node:
-                self.cross_node_bytes += nbytes
+                if borrowed:
+                    self.cross_node_view_bytes += nbytes
+                else:
+                    self.cross_node_bytes += nbytes
             if dt is not None:
                 self.permute_time_s += dt
                 self.timed_pieces += 1
@@ -142,6 +158,7 @@ class SessionMetrics:
             "bytes_served": float(self.bytes_served),
             "bytes_copied": float(self.bytes_copied),
             "cross_node_bytes": float(self.cross_node_bytes),
+            "cross_node_view_bytes": float(self.cross_node_view_bytes),
             "permute_time_s": self.permute_time_s,
             "timed_pieces": float(self.timed_pieces),
             "requests": float(self.requests),

@@ -17,6 +17,29 @@ class FileOptions:
 
     num_readers: Optional[int] = None       # None → autotuned (§VI-A)
     splinter_bytes: int = 8 * 1024 * 1024
+    # Reader backend: "thread" (default — helper I/O threads in this
+    # process) or "process" (real reader worker processes preadv-ing into a
+    # shared-memory arena, splinter events over cross-process rings; see
+    # src/repro/ipc/ and core.buffers.ProcessReaderSet). Zero-copy borrowed
+    # views and the splinter stream work identically in both; the process
+    # backend has no work stealing and needs picklable delay/fault hooks.
+    backend: str = "thread"
+    # process backend: cap on worker processes per session (readers are
+    # split across workers the way threads split readers).
+    max_workers: int = 8
+    # process backend: per-worker splinter-event ring capacity (slots). A
+    # full ring throttles its worker; it never drops or overwrites events.
+    ring_slots: int = 512
+    # process backend: picklable crash-injection hook run in the worker
+    # before each splinter read ((reader, splinter_index) -> None; e.g.
+    # repro.ipc.worker.ExitAfter / RaiseAfter). Test/bench only.
+    worker_fault: object = None
+    # process backend: seconds to wait for spawned workers to attach
+    # (interpreter start + imports — raise on cold/slow-spawn hosts)
+    # before the session fails, and the graceful-drain join window
+    # before SIGKILL on stop.
+    worker_attach_timeout: float = 120.0
+    worker_stop_timeout: float = 10.0
     # Dynamic splinter sizing: when True, each new session's splinter size is
     # chosen by the Director's SplinterSizer from observed per-reader
     # throughput and steal pressure (core/autotune.py); ``splinter_bytes``
@@ -40,10 +63,20 @@ class FileOptions:
     prefault_arena: bool = False
 
     def reader_options(self) -> ReaderOptions:
+        if self.backend not in ("thread", "process"):
+            raise ValueError(
+                f"unknown reader backend {self.backend!r} "
+                f"(expected 'thread' or 'process')")
         return ReaderOptions(
             splinter_bytes=self.splinter_bytes,
             work_stealing=self.work_stealing,
             max_io_threads=self.max_io_threads,
+            backend=self.backend,
+            max_workers=self.max_workers,
+            ring_slots=self.ring_slots,
+            worker_fault=self.worker_fault,
+            worker_attach_timeout=self.worker_attach_timeout,
+            worker_stop_timeout=self.worker_stop_timeout,
             delay_model=self.delay_model,  # type: ignore[arg-type]
             network=self.network,
             piece_timing_every=self.piece_timing_every,

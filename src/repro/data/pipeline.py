@@ -68,8 +68,12 @@ depends on the stream: splinters whose events were dropped (a delivery
 racing ``resize()`` — dropped and counted, never rerouted to a reused
 consumer slot) are staged from the authoritative event log at finalize.
 Batches are bit-identical to the ``streaming=False`` whole-window path.
-A per-call ``sharding`` forces that call onto the whole-window path
-(streamed chunks are placed before the call-site sharding is known).
+A per-call ``sharding`` forces that call onto the whole-window path —
+streamed chunks are placed before the call-site sharding is known, so they
+cannot satisfy it. The fallback is explicit: the first sharded call on a
+streaming pipeline emits a ``RuntimeWarning`` (once per pipeline) because
+it forfeits the read/stage overlap on every sharded step; a run that
+passes a sharding each step should construct with ``streaming=False``.
 Note on ``FileOptions(adaptive_splinters=True)``: each splinter-size
 change changes the chunk count/shape signature and retraces the fused
 consume executable once; the sizer EMA-smooths and 256 KiB-quantizes its
@@ -106,6 +110,33 @@ integer gives domains-per-node — and ``--numa-pin``):
   close) — ``benchmarks/perf_numa.py`` gates on cross-domain bytes
   dropping under NUMA-aware placement with bit-identical batches.
 
+Multi-process reader backend (``FileOptions(backend="process")``)
+-----------------------------------------------------------------
+With ``backend="process"`` each step session's arena is a **shared-memory
+segment** (``src/repro/ipc/shm.py``) filled by real reader worker
+processes (``preadv`` directly into the mapping) and consumed here through
+the very same borrowed-view machinery — every mode above (host zero-copy,
+device ingest, streamed staging) works unchanged, with splinter events
+arriving over cross-process rings instead of in-process callbacks.
+``bytes_copied`` stays 0 *in this consumer process*: the views ``np``
+arrays and staged chunks alias are the mapped segment itself.
+
+Shm view lifetime contract (the cross-process sharpening of the rules
+below):
+
+  * a borrowed view into the shm arena is valid until **its session
+    closes**, exactly like the thread backend — session close releases
+    the view and unmaps the segment (pages a staged transfer still pins
+    survive until that exporter is dropped at the next ``get_batch*``);
+  * a **worker crash fails the session** (descriptive ``WorkerCrashed``
+    raised from the blocked call within the supervisor's poll interval —
+    no hang); there is no in-place worker respawn: a respawned session is
+    a *new* session with a *new* mapping, so any view of the dead
+    session's arena is invalid — re-read through the new session instead
+    of holding views across a failure;
+  * worker processes never inherit fds: each opens the data file and the
+    shm segments by name (``io/posix.py`` fd-hygiene notes).
+
 Lifetime rules:
   * the returned ``(inputs, labels)`` are ordinary JAX device arrays — they
     own their storage and stay valid as long as the caller holds them;
@@ -130,13 +161,14 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import CkIO, Client, FileOptions, Session
+from repro.core import CkIO, Client, FileOptions, Session, WorkerCrashed
 from repro.core.buffers import SplinterEvent
 from repro.core.futures import CkCallback, CkFuture
 from repro.core.metrics import IngestMetrics, StreamMetrics
@@ -266,6 +298,7 @@ class CkIOPipeline:
             self.stage_chunk_bytes, max_inflight_stage_bytes)
         self.ingest = IngestMetrics()
         self.stream = StreamMetrics()
+        self._warned_stream_sharding = False
         self._t_last_step = time.perf_counter()
         self._bufs: Dict[int, _StepBuffer] = {}
         self._retired: List[Session] = []   # zero-copy sessions pending close
@@ -698,6 +731,25 @@ class CkIOPipeline:
         buf = self._wait_step(step, timeout)
         if buf.stream is not None and sharding is None:
             return self._get_batch_device_streamed(buf, use_pallas=use_pallas)
+        if buf.stream is not None and not self._warned_stream_sharding:
+            # Explicit, not silent: streamed chunks were device_put with
+            # default placement while the reads were landing — before this
+            # call-site sharding existed — so they cannot satisfy it. The
+            # step falls back to the whole-window path (stage once WITH the
+            # sharding, reassemble on device); the already-staged chunks
+            # are discarded. Warn once per pipeline: per-call sharding on a
+            # streaming pipeline forfeits the read/stage overlap every
+            # step, which is almost never what a multi-host run wants —
+            # construct the pipeline with streaming=False (or ship the
+            # sharding at construction time) instead.
+            self._warned_stream_sharding = True
+            warnings.warn(
+                "get_batch_device(sharding=...) on a streaming pipeline: "
+                "streamed chunks are placed before a per-call sharding is "
+                "known; falling back to the whole-window staging path "
+                "(overlap lost) for every sharded call. Use "
+                "streaming=False if every step passes a sharding.",
+                RuntimeWarning, stacklevel=2)
         tokens, view = self._window_tokens(buf)
         itemsize = self.meta.itemsize
         valid_tokens = buf.nbytes // itemsize
@@ -815,6 +867,22 @@ class CkIOPipeline:
         return jax.device_put(inputs, sharding), jax.device_put(labels, sharding)
 
     def close(self) -> None:
+        # A crashed reader worker in a *prefetched* session surfaces as a
+        # raising task the moment anything pumps the scheduler. Teardown
+        # must still run to completion (sessions stopped, shm unmapped,
+        # the file fd closed) — so close catches those here, finishes, and
+        # re-raises the first one at the end instead of aborting half-way
+        # with the fd leaked.
+        surfaced: List[BaseException] = []
+
+        def pump_all() -> None:
+            while True:
+                try:
+                    self.ck.pump()
+                    return
+                except WorkerCrashed as e:   # finite: ≤1 task per session
+                    surfaced.append(e)
+
         # Flush queued session starts BEFORE tearing down streams: a
         # prefetch session that only starts during this pump subscribes its
         # splinter stream then (and may stage chunks) — aborting first
@@ -823,7 +891,7 @@ class CkIOPipeline:
         # is joined below before the fd goes away (an in-flight prefetch
         # session must not pread a closed file; shutdown is off the hot
         # path).
-        self.ck.pump()
+        pump_all()
         for buf in list(self._bufs.values()):
             if buf.stream is not None:
                 self._abort_stream(buf)
@@ -842,4 +910,11 @@ class CkIOPipeline:
             raise RuntimeError(
                 "pipeline close: reader thread(s) still running after stop "
                 "timeout; file left open")
-        self.ck.close_sync(self.file)
+        while True:
+            try:
+                self.ck.close_sync(self.file)
+                break
+            except WorkerCrashed as e:
+                surfaced.append(e)
+        if surfaced:
+            raise surfaced[0]

@@ -39,6 +39,26 @@ class PosixFile:
     One instance is shared by every BufferReader of every session on this
     "node" — matching the paper's model where chares on a node share the file
     opened by the runtime.
+
+    Multi-process fd hygiene (the ``backend="process"`` contract)
+    -------------------------------------------------------------
+    ``addref``/``close`` refcount the descriptor **within one process
+    only** — the refcount is plain process memory, and an fd number means
+    nothing in another process anyway. Reader worker processes therefore
+    NEVER receive this object (or its fd) across ``spawn``: each worker
+    calls ``PosixFile.open(path)`` itself (``ipc/worker.py``), getting a
+    descriptor it alone owns and closes, so:
+
+    * a worker crash cannot poison the parent's fd (no shared file table
+      entry beyond the kernel's usual open-file object);
+    * the parent may ``close()`` its handle while workers still read —
+      each process's refcount covers exactly its own users;
+    * fd-inheritance rules (``spawn`` closes fds by default; Python marks
+      them non-inheritable) never enter the picture.
+
+    Within a process, the rule stays: every sharer that outlives the
+    opener must ``addref()`` and balance it with ``close()``; the last
+    ``close`` releases the descriptor.
     """
 
     path: str

@@ -1,0 +1,39 @@
+"""Cross-process IPC primitives for the multi-process reader backend.
+
+Three layers (bottom-up), consumed by ``core/buffers.py``'s
+``ProcessReaderSet`` supervisor when ``FileOptions(backend="process")``:
+
+* ``shm``  — :class:`SharedArena`: a named shared-memory segment mapped into
+  reader worker processes and the consumer process; the session arena (and
+  the ring block) live here, preserving zero-copy delivery across the
+  process boundary.
+* ``ring`` — :class:`EventRing`: a fixed-slot, sequence-numbered SPSC
+  splinter-event ring (futex-free polling with backoff) per worker, plus
+  the attach/go/stop/error handshake header.
+* ``worker`` — :func:`worker_main`: the spawn entry point; opens its own
+  fds, pins + first-touches its stripes, reads splinters into the arena and
+  publishes completion events.
+"""
+from repro.ipc.ring import EventRing, RingEvent, ring_bytes
+from repro.ipc.shm import SharedArena
+from repro.ipc.worker import (
+    ExitAfter,
+    RaiseAfter,
+    StallReader,
+    WorkerCrashed,
+    WorkerSpec,
+    worker_main,
+)
+
+__all__ = [
+    "EventRing",
+    "RingEvent",
+    "ring_bytes",
+    "SharedArena",
+    "ExitAfter",
+    "RaiseAfter",
+    "StallReader",
+    "WorkerCrashed",
+    "WorkerSpec",
+    "worker_main",
+]

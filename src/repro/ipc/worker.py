@@ -1,0 +1,209 @@
+"""Reader worker process: the paper's buffer chare as a real OS process.
+
+``worker_main`` is the spawn entry point for one reader worker of a
+``backend="process"`` session (``core/buffers.py`` ``ProcessReaderSet`` is
+the supervisor). The handshake protocol — everything a worker needs travels
+in a picklable :class:`WorkerSpec`, nothing relies on fd or state
+inheritance across ``spawn``:
+
+1. **attach**: map the session arena and the worker's event ring *by name*
+   (each process opens and immediately closes its own fds); open an **own**
+   file descriptor on the data file (``PosixFile.open`` — see the fd-hygiene
+   notes in ``io/posix.py``).
+2. **place**: optionally ``sched_setaffinity``-pin the whole process to its
+   stripe's NUMA-domain CPUs, then first-touch-fault the pages of every
+   stripe it owns (one byte per page) — under Linux first-touch this is
+   what makes PR-4's domain striping span *real* CPU sets across processes.
+   Outcomes (pages, pin) are reported through the ring header.
+3. **barrier**: report ``ATTACHED`` and park until the supervisor opens the
+   ``go`` gate (all workers placed — stripe placement is complete before
+   any read) or requests a stop (session cancelled during spawn).
+4. **drain**: read each owned splinter with ``preadv`` straight into the
+   shared arena (zero copies in this process too) and publish one ring
+   event per completion. A stop request between splinters exits the loop —
+   the graceful-drain half of the supervisor's stop/SIGKILL protocol.
+5. **exit**: report ``DONE`` and return. Any exception lands in the ring's
+   error area as ``ERROR`` + message (the supervisor surfaces it verbatim);
+   a hard crash (``os._exit``, SIGKILL) leaves the state below ``DONE``,
+   which the supervisor's dead-child check converts into a descriptive
+   session error instead of a hang.
+
+Test hooks (picklable — ``spawn`` re-imports this module in the child):
+:class:`StallReader` reproduces the thread backend's ``delay_model`` for a
+chosen reader; :class:`ExitAfter` hard-kills the worker mid-session
+(crash-path tests); :class:`RaiseAfter` exercises the ERROR reporting path.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.io.layout import Splinter
+from repro.io.numa import first_touch, pin_thread_to_cpus
+from repro.io.posix import PosixFile
+from repro.ipc.ring import (
+    PIN_FAILED,
+    PIN_NONE,
+    PIN_OK,
+    ST_ATTACHED,
+    ST_DONE,
+    EventRing,
+    RingEvent,
+    ring_bytes,
+)
+from repro.ipc.shm import SharedArena
+
+
+class WorkerCrashed(RuntimeError):
+    """A reader worker process died (or errored) before finishing its
+    stripe; the owning session is failed fast with this error."""
+
+
+@dataclass
+class WorkerSpec:
+    """Everything one worker needs, shipped through the spawn pickle."""
+
+    worker_id: int
+    file_path: str                       # data file — worker opens OWN fd
+    arena_path: str                      # session arena shm segment name
+    arena_bytes: int
+    base_offset: int                     # plan.offset (arena[0] ≡ this)
+    ring_path: str                       # ring-block shm segment name
+    ring_region_bytes: int
+    ring_offset: int                     # this worker's ring within the block
+    ring_slots: int
+    splinters: Tuple[Splinter, ...]      # owned splinters, stripe order
+    stripe_bounds: Tuple[Tuple[int, int], ...]   # owned stripes (abs bounds)
+    prefault: bool = False               # first-touch owned stripes
+    pin_cpus: Optional[Tuple[int, ...]] = None   # sched_setaffinity target
+    delay_model: Optional[object] = None  # picklable (reader, Splinter)->s
+    fault: Optional[object] = None        # picklable (reader, index)->None
+    # Supervisor's pid: the orphan guard. 0 disables (inline test runs).
+    # A spawned worker whose parent vanishes (SIGKILL/OOM of the consumer
+    # process — daemon=True only covers clean interpreter exit) must not
+    # keep polling a ring nobody will ever drain while pinning the
+    # session-sized arena mapping in tmpfs.
+    parent_pid: int = 0
+
+
+def worker_main(spec: WorkerSpec) -> None:
+    """Spawn entry point (see module docstring for the protocol)."""
+    # Orphan guard: polled between splinters and inside every backoff loop
+    # (wait_go, full-ring publish). Deliberately NOT PR_SET_PDEATHSIG —
+    # the death signal fires when the *thread* that spawned us exits, and
+    # workers are spawned from whichever transient thread happens to pump
+    # the session-start task; polling getppid() tracks the supervisor
+    # *process* and nothing else.
+    if spec.parent_pid:
+        orphaned = lambda: os.getppid() != spec.parent_pid  # noqa: E731
+        if orphaned():                       # parent died during spawn
+            return
+    else:
+        orphaned = lambda: False             # noqa: E731 (inline runs)
+    rings = SharedArena.attach(spec.ring_path, spec.ring_region_bytes)
+    ring = EventRing(
+        rings.buf[spec.ring_offset:
+                  spec.ring_offset + ring_bytes(spec.ring_slots)],
+        spec.ring_slots,
+    )
+    ring.set_pid(os.getpid())
+    try:
+        pin = PIN_NONE
+        if spec.pin_cpus:
+            # Whole-process affinity: unlike the thread backend's per-thread
+            # re-pinning, one worker process has one CPU set — its primary
+            # stripe's domain (workers owning stripes in several domains
+            # keep the first; first-touch still runs per stripe).
+            pin = PIN_OK if pin_thread_to_cpus(spec.pin_cpus) else PIN_FAILED
+        arena = SharedArena.attach(spec.arena_path, spec.arena_bytes)
+        arr = arena.ndarray()
+        pages = 0
+        if spec.prefault:
+            for lo, hi in spec.stripe_bounds:
+                if hi > lo:
+                    pages += first_touch(
+                        arr[lo - spec.base_offset: hi - spec.base_offset])
+        ring.set_touch(pages, pin)
+        ring.set_state(ST_ATTACHED)
+        if not ring.wait_go(should_abort=orphaned):   # cancelled / orphaned
+            ring.set_state(ST_DONE)
+            return
+        f = PosixFile.open(spec.file_path)   # own fd — never inherited
+        try:
+            for sp in spec.splinters:
+                if ring.stop_requested():    # graceful drain request
+                    break
+                if orphaned():               # nobody left to drain events
+                    break
+                if spec.delay_model is not None:
+                    d = spec.delay_model(sp.reader, sp)
+                    if d > 0:
+                        time.sleep(d)
+                if spec.fault is not None:
+                    spec.fault(sp.reader, sp.index)
+                t0 = time.perf_counter()
+                lo = sp.offset - spec.base_offset
+                view = memoryview(arr)[lo: lo + sp.nbytes]
+                n = f.pread_into(sp.offset, view)
+                dt = time.perf_counter() - t0
+                if n != sp.nbytes:
+                    raise IOError(
+                        f"short read: wanted {sp.nbytes} at {sp.offset}, "
+                        f"got {n}")
+                published = ring.publish(RingEvent(
+                    index=sp.index, reader=sp.reader, offset=sp.offset,
+                    nbytes=sp.nbytes, arena_off=lo,
+                    t_arrival=time.perf_counter(), read_dt=dt,
+                ), should_abort=orphaned)
+                if not published:            # stop/orphan won the backoff
+                    break
+        finally:
+            f.close()
+        ring.set_state(ST_DONE)
+    except BaseException as e:
+        ring.set_error(f"{type(e).__name__}: {e}")
+        raise SystemExit(1)
+
+
+# -- picklable test/bench hooks ----------------------------------------------
+@dataclass
+class StallReader:
+    """Process-backend ``delay_model``: delay every splinter of ``reader``
+    by ``seconds`` (the straggler injector, picklable for spawn)."""
+
+    reader: int
+    seconds: float
+
+    def __call__(self, reader: int, sp: Splinter) -> float:
+        return self.seconds if reader == self.reader else 0.0
+
+
+@dataclass
+class ExitAfter:
+    """Hard-crash fault hook: ``os._exit(code)`` before reading the
+    (``after``+1)-th splinter — no ERROR state, no cleanup, exactly what a
+    segfault/OOM-kill looks like to the supervisor."""
+
+    after: int
+    code: int = 42
+
+    def __call__(self, reader: int, index: int) -> None:
+        self.after -= 1
+        if self.after < 0:
+            os._exit(self.code)
+
+
+@dataclass
+class RaiseAfter:
+    """Soft-failure fault hook: raise before reading the (``after``+1)-th
+    splinter — exercises the worker's ERROR-state reporting path."""
+
+    after: int
+    message: str = "injected worker fault"
+
+    def __call__(self, reader: int, index: int) -> None:
+        self.after -= 1
+        if self.after < 0:
+            raise RuntimeError(self.message)

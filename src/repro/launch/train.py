@@ -81,6 +81,19 @@ def main() -> None:
                     help="reader->PE placement policy (core/placement.py);"
                          " near_consumers/domain_spread use --topology"
                          " when given")
+    ap.add_argument("--backend", default="thread",
+                    choices=["thread", "process"],
+                    help="reader backend: 'thread' (helper I/O threads in"
+                         " this process) or 'process' (real reader worker"
+                         " processes preadv-ing into a shared-memory arena,"
+                         " splinter events over cross-process rings —"
+                         " src/repro/ipc). Zero-copy delivery and streaming"
+                         " work identically; with --numa-pin the workers"
+                         " sched_setaffinity-pin themselves, so pinning"
+                         " spans real CPU sets")
+    ap.add_argument("--max-workers", type=int, default=4,
+                    help="process backend: cap on reader worker processes"
+                         " per session")
     ap.add_argument("--adaptive-splinters", action="store_true",
                     help="size splinters per session from observed"
                          " per-reader throughput + steal pressure"
@@ -122,7 +135,10 @@ def main() -> None:
                               placement=args.placement,
                               topology=topology,
                               numa_pin=args.numa_pin,
-                              prefault_arena=topology is not None),
+                              prefault_arena=(topology is not None
+                                              or args.backend == "process"),
+                              backend=args.backend,
+                              max_workers=args.max_workers),
         streaming=args.streaming,
     )
 

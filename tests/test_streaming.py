@@ -475,7 +475,10 @@ def test_streaming_sharding_falls_back_to_whole_window(corpus):
     dev = jax.devices()[0]
     from jax.sharding import SingleDeviceSharding
 
-    x, y = pipe.get_batch_device(0, sharding=SingleDeviceSharding(dev))
+    # The fallback is explicit now: one RuntimeWarning per pipeline
+    # (streamed chunks are placed before a per-call sharding is known).
+    with pytest.warns(RuntimeWarning, match="whole-window"):
+        x, y = pipe.get_batch_device(0, sharding=SingleDeviceSharding(dev))
     need = 4 * 65
     np.testing.assert_array_equal(np.asarray(x),
                                   raw[:need].reshape(4, 65)[:, :-1])
