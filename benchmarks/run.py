@@ -100,6 +100,14 @@ def perf_shm() -> None:
     m.run(quick=common.QUICK)
 
 
+def perf_recovery() -> None:
+    # Writes BENCH_recovery.json at the repo root (fault recovery: a worker
+    # SIGKILLed mid-drain vs a clean paced drain — respawn/re-issue both
+    # complete bit-identically with bytes_copied == 0, overhead bounded).
+    from benchmarks import perf_recovery as m
+    m.run(quick=common.QUICK)
+
+
 ALL = [
     fig1_naive_overdecomposition,
     fig2_disk_vs_network,
@@ -115,6 +123,7 @@ ALL = [
     perf_streaming,
     perf_numa,
     perf_shm,
+    perf_recovery,
 ]
 
 

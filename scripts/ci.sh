@@ -25,6 +25,15 @@
 #                                            copy-through-pipe baseline,
 #                                            consumer bytes_copied == 0,
 #                                            process/thread bit-identity)
+#   benchmarks/perf_recovery.py --quick      fault recovery (worker SIGKILLed
+#                                            mid-drain completes bit-
+#                                            identically via respawn AND
+#                                            re-issue, overhead <= 1.5x a
+#                                            clean paced drain)
+# Fault matrix: the seeded fault-injection tests replayed under several
+# CKIO_FAULT_SEED values (tier-1 already runs the full recovery suite once
+# under the default seed; the matrix re-derives the FaultPlan from each
+# seed and must stay deterministic + green for all of them).
 # Coverage floor: line coverage of src/repro/core + src/repro/data +
 # src/repro/io + src/repro/ipc over the core/data-focused tests must stay >= the floor in
 # scripts/coverage_floor.py (stdlib settrace fallback — no third-party deps
@@ -49,6 +58,17 @@ python benchmarks/perf_numa.py --quick
 
 echo "== shm / multi-process backend benchmark (smoke) =="
 python benchmarks/perf_shm.py --quick
+
+echo "== recovery benchmark (smoke, mid-drain SIGKILL) =="
+python benchmarks/perf_recovery.py --quick
+
+echo "== fault matrix (seeded deterministic replay) =="
+for seed in 11 20260809 424242; do
+  echo "-- CKIO_FAULT_SEED=$seed --"
+  CKIO_FAULT_SEED=$seed PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -q tests/test_recovery.py \
+    -k "fault_plan or replay or reissue or respawn"
+done
 
 echo "== coverage floor (core + data + io + ipc) =="
 python scripts/coverage_floor.py

@@ -12,6 +12,7 @@ from repro.core.buffers import (
     SplinterEvent,
 )
 from repro.ipc.worker import WorkerCrashed
+from repro.core.faults import FaultPlan
 from repro.core.futures import CkCallback, CkFuture
 from repro.core.migration import Client, LocationManager, VirtualProxy
 from repro.core.placement import Topology, place_readers
@@ -19,6 +20,7 @@ from repro.core.scheduler import BackgroundWorker, TaskScheduler
 from repro.core.metrics import (
     IngestMetrics,
     LocalityMetrics,
+    RecoveryMetrics,
     SessionMetrics,
     StreamMetrics,
 )
@@ -37,6 +39,8 @@ __all__ = [
     "NetworkModel",
     "ProcessReaderSet",
     "WorkerCrashed",
+    "FaultPlan",
+    "RecoveryMetrics",
     "ReaderOptions",
     "SplinterEvent",
     "StreamMetrics",

@@ -78,6 +78,28 @@ class ReaderOptions:
     worker_attach_timeout: float = 120.0
     # process backend: graceful-drain join timeout before SIGKILL.
     worker_stop_timeout: float = 10.0
+    # process backend: what to do when a worker dies (or errors, or is
+    # watchdog-killed) after the start gate opened, with splinters left:
+    #   "none"    — fail the session fast (the PR-5 contract; default),
+    #   "respawn" — spawn a replacement process that attaches to the SAME
+    #               arena (go-gate protocol) and reads the unfinished tail,
+    #   "reissue" — the supervisor re-reads the unfinished splinters itself
+    #               (parent-side fd, straight into the mapped arena).
+    # Attach-phase failures stay terminal in every mode: the first-touch
+    # placement barrier cannot be re-run once other workers hold data.
+    recovery: str = "none"
+    # process backend: respawn budget for the whole session; exhausting it
+    # fails the session with a descriptive WorkerCrashed.
+    max_respawns: int = 2
+    # process backend: hung-worker watchdog — a live worker that has made
+    # no ring progress for this many seconds while owning unfinished
+    # splinters is SIGKILLed (then handled per ``recovery``). 0 = off.
+    worker_watchdog_s: float = 0.0
+    # Fault-injection hooks (core/faults.py — picklable for the process
+    # backend): io_fault plugs into PosixFile.pread_into (short reads /
+    # transient OSErrors), ring_fault into EventRing.publish (torn stamps).
+    io_fault: Optional[object] = None
+    ring_fault: Optional[object] = None
     # test/bench hook: seconds of injected delay before reading a splinter
     # (process backend: must be picklable — see repro.ipc.worker.StallReader)
     delay_model: Optional[Callable[[int, Splinter], float]] = None
@@ -300,7 +322,8 @@ class BufferReaderSet:
         if self.plan.nbytes:
             # Kick kernel readahead for the whole session before the first
             # pread lands (greedy prefetch starts now anyway).
-            self.file.advise_sequential(self.plan.offset, self.plan.nbytes)
+            self.file.advise_sequential(self.plan.offset, self.plan.nbytes,
+                                        stats=self.metrics.recovery)
         for t in range(nthreads):
             th = threading.Thread(
                 target=self._reader_main, args=(t, nthreads), daemon=True
@@ -448,7 +471,9 @@ class BufferReaderSet:
             t0 = time.perf_counter()
             lo = sp.offset - self._base
             view = memoryview(self._arena)[lo : lo + sp.nbytes]
-            n = self.file.pread_into(sp.offset, view)
+            n = self.file.pread_into(sp.offset, view,
+                                     stats=self.metrics.recovery,
+                                     fault=self.opts.io_fault)
             dt = time.perf_counter() - t0
             if n != sp.nbytes and not self._cancelled:
                 raise IOError(
@@ -699,6 +724,21 @@ class ProcessReaderSet(BufferReaderSet):
     pending queues cannot be shared), ``delay_model``/``worker_fault`` must
     be picklable, and a worker process pins once (its primary stripe's
     domain) rather than re-pinning per stripe.
+
+    Fault recovery (``ReaderOptions(recovery=...)``): with recovery
+    enabled, a worker that dies, errors, or trips the no-progress watchdog
+    *after* the start gate opened no longer fails the session — its
+    unfinished splinters are re-routed, either to a replacement process
+    attached to the same arena (``"respawn"``, bounded by
+    ``max_respawns``) or to an emergency supervisor-side reader
+    (``"reissue"``). Both paths re-enter ``_mark_done``, so waiters,
+    subscriber order/replay, the arrival log and zero-copy delivery all
+    behave as if the original worker had read the bytes — double delivery
+    is impossible (``_done[index]`` already gates it) and ``bytes_copied``
+    stays 0 (the bytes land in the same shared pages). Attach-phase
+    failures remain terminal in every mode: the first-touch placement
+    barrier cannot be re-run. Recovery observables land in
+    ``metrics.recovery`` (:class:`~repro.core.metrics.RecoveryMetrics`).
     """
 
     def __init__(
@@ -718,6 +758,24 @@ class ProcessReaderSet(BufferReaderSet):
         self._poller: Optional[threading.Thread] = None
         self._attached_evt = threading.Event()
         self._gates_open = False
+        # -- recovery state (supervisor thread only, except where noted) --
+        # per-worker splinter assignment (parallel to _procs/_rings; what a
+        # recovery has to re-route), retirement flags (a retired worker is
+        # excluded from liveness checks — its work moved elsewhere), and
+        # last-ring-progress stamps (the watchdog's signal).
+        self._worker_splinters: List[Tuple[Splinter, ...]] = []
+        self._worker_retired: List[bool] = []
+        self._last_progress: List[float] = []
+        # respawned worker -> (attach deadline, failure-detection stamp);
+        # its gate opens individually as soon as it attaches.
+        self._pending_attach: Dict[int, Tuple[float, float]] = {}
+        # respawned workers get their own ring segments (the original ring
+        # block's name is unlinked at gate open); unlinked at their own
+        # gate open, closed at shutdown.
+        self._extra_ring_shms: Dict[int, SharedArena] = {}
+        self._respawns_used = 0
+        self._reissue_threads: List[threading.Thread] = []
+        self._workers_shutdown = False   # one-shot guard (io-counter fold)
 
     def _alloc_arena(self, plan: StripePlan) -> np.ndarray:
         # Named shm segment instead of private np.empty: ftruncate allocates
@@ -740,7 +798,8 @@ class ProcessReaderSet(BufferReaderSet):
             return
         # Readahead from the parent helps too: the page cache is shared
         # with the workers.
-        self.file.advise_sequential(self.plan.offset, self.plan.nbytes)
+        self.file.advise_sequential(self.plan.offset, self.plan.nbytes,
+                                    stats=self.metrics.recovery)
         nworkers = min(self.plan.num_readers, max(1, self.opts.max_workers))
         rb = ring_bytes(self.opts.ring_slots)
         self._rings_shm = SharedArena.create(nworkers * rb, tag="rings")
@@ -794,8 +853,13 @@ class ProcessReaderSet(BufferReaderSet):
                 pin_cpus=pin_cpus,
                 delay_model=self.opts.delay_model,
                 fault=self.opts.worker_fault,
+                io_fault=self.opts.io_fault,
+                ring_fault=self.opts.ring_fault,
                 parent_pid=os.getpid(),
             )
+            self._worker_splinters.append(spec.splinters)
+            self._worker_retired.append(False)
+            self._last_progress.append(time.monotonic())
             self._procs.append(ctx.Process(
                 target=worker_main, args=(spec,), daemon=True,
                 name=f"ckio-reader-{w}",
@@ -814,6 +878,13 @@ class ProcessReaderSet(BufferReaderSet):
         if self.error is not None:
             raise self.error
         return ok and self._gates_open
+
+    def worker_pids(self) -> List[int]:
+        """Live (non-retired) worker pids, ring-reported — what a fault
+        harness SIGKILLs to exercise recovery from outside."""
+        return [self._rings[w].pid()
+                for w in range(len(self._rings))
+                if not self._worker_retired[w] and self._rings[w].pid()]
 
     def cancel(self) -> None:
         self._cancelled = True
@@ -916,20 +987,25 @@ class ProcessReaderSet(BufferReaderSet):
 
     def _poll_main(self) -> None:
         total = len(self._done)
-        rings, procs = self._rings, self._procs
         gated = True
         deadline = time.monotonic() + self.opts.worker_attach_timeout
         pause = 50e-6
         try:
             while not self._cancelled:
                 progressed = 0
-                for ring in rings:
-                    events = ring.consume(limit=1024)
+                for w in range(len(self._rings)):
+                    events = self._rings[w].consume(limit=1024)
                     for ev in events:
                         self._on_ring_event(ev)
+                    if events:
+                        self._last_progress[w] = time.monotonic()
                     progressed += len(events)
                 if gated:
-                    states = [r.state() for r in rings]
+                    # Initial attach barrier. Recovery never runs while
+                    # gated (attach-phase failures are terminal — see
+                    # _handle_worker_failure), so _rings still holds
+                    # exactly the original workers here.
+                    states = [r.state() for r in self._rings]
                     if any(st == ST_ERROR for st in states):
                         # A worker died during attach: do NOT open gates or
                         # report attachment — fall through to the dead-
@@ -938,7 +1014,7 @@ class ProcessReaderSet(BufferReaderSet):
                         # success on a dying session).
                         pass
                     elif all(st != ST_INIT for st in states):
-                        for ring in rings:
+                        for ring in self._rings:
                             pages, pin = ring.touch_report()
                             if pages:
                                 self.locality.record_prefault(pages)
@@ -947,46 +1023,62 @@ class ProcessReaderSet(BufferReaderSet):
                             ring.open_gate()
                         # Names are no longer needed (everyone holds a
                         # mapping): unlink now so nothing leaks in
-                        # /dev/shm even if this process dies.
-                        self._shm.unlink()
+                        # /dev/shm even if this process dies. With
+                        # recovery="respawn" the ARENA name must survive —
+                        # a replacement worker attaches to it by name — so
+                        # its unlink waits for _shutdown_workers (the
+                        # SIGKILL-leak window widens from spawn→attach to
+                        # the session lifetime; that is the price of
+                        # in-place respawn and it is opt-in).
+                        if self.opts.recovery != "respawn":
+                            self._shm.unlink()
                         self._rings_shm.unlink()
                         gated = False
                         self._gates_open = True
+                        now = time.monotonic()
+                        for w in range(len(self._last_progress)):
+                            self._last_progress[w] = now
                         self._attached_evt.set()
                     elif time.monotonic() > deadline:
-                        waiting = [w for w, r in enumerate(rings)
+                        waiting = [w for w, r in enumerate(self._rings)
                                    if r.state() == ST_INIT]
                         self._fail(WorkerCrashed(
                             f"reader worker(s) {waiting} failed to attach "
                             f"within {self.opts.worker_attach_timeout}s"))
                         return
+                if self._pending_attach and not self._check_pending_attach():
+                    return
                 with self._lock:
                     if self._ndone >= total:
                         return
-                for w, (p, ring) in enumerate(zip(procs, rings)):
+                if not gated:
+                    self._watchdog_sweep()
+                for w in range(len(self._procs)):
+                    if self._worker_retired[w]:
+                        continue
+                    p, ring = self._procs[w], self._rings[w]
                     st = ring.state()
-                    if st == ST_ERROR:
-                        self._fail(WorkerCrashed(
-                            f"{self._worker_label(w)} failed: "
-                            f"{ring.error_message()}"))
+                    if st != ST_ERROR and (st == ST_DONE or p.is_alive()):
+                        continue
+                    # Dead or errored. Drain anything it published before
+                    # dying, then decide: the session may actually be
+                    # complete.
+                    events = ring.consume()
+                    for ev in events:
+                        self._on_ring_event(ev)
+                    progressed += len(events)
+                    with self._lock:
+                        ndone = self._ndone
+                    if ndone >= total:
                         return
-                    if st != ST_DONE and not p.is_alive():
-                        # Drain anything it published before dying, then
-                        # decide: the session may actually be complete.
-                        for ev in ring.consume():
-                            self._on_ring_event(ev)
-                        with self._lock:
-                            ndone = self._ndone
-                        if ndone >= total:
-                            return
-                        if ring.state() == ST_ERROR:
-                            msg = f"failed: {ring.error_message()}"
-                        else:
-                            msg = (f"exited with code {p.exitcode} before "
-                                   f"completing its splinters "
-                                   f"({ndone}/{total} read)")
-                        self._fail(WorkerCrashed(
-                            f"{self._worker_label(w)} {msg}"))
+                    if ring.state() == ST_ERROR:
+                        msg = (f"{self._worker_label(w)} failed: "
+                               f"{ring.error_message()}")
+                    else:
+                        msg = (f"{self._worker_label(w)} exited with code "
+                               f"{p.exitcode} before completing its "
+                               f"splinters ({ndone}/{total} read)")
+                    if not self._handle_worker_failure(w, msg, gated):
                         return
                 if progressed:
                     pause = 50e-6
@@ -999,8 +1091,217 @@ class ProcessReaderSet(BufferReaderSet):
             # attach barrier of a dead session.
             self._attached_evt.set()
 
+    # -- recovery (supervisor thread) -----------------------------------------
+    def _unfinished(self, w: int) -> List[Splinter]:
+        """Splinters assigned to worker ``w`` that have not landed (its
+        ring must be drained first so nothing already-published counts)."""
+        with self._lock:
+            return [sp for sp in self._worker_splinters[w]
+                    if not self._done[sp.index]]
+
+    def _retire_worker(self, w: int) -> None:
+        self._worker_retired[w] = True
+        self._pending_attach.pop(w, None)
+
+    def _handle_worker_failure(self, w: int, msg: str, gated: bool) -> bool:
+        """A worker died / errored (ring drained). Recover per
+        ``opts.recovery`` or fail the session; returns True when the
+        session should keep running.
+
+        Attach-phase failures are always terminal: the go-gate exists so
+        every stripe's first-touch placement completes before any read,
+        and that collective barrier cannot be re-run once gates opened.
+        Post-gate, a replacement skips prefault entirely (stripe pages
+        either carry placement from the dead worker's touch or hold
+        already-read data a re-touch would corrupt — first_touch writes).
+        """
+        unfinished = self._unfinished(w)
+        self._retire_worker(w)
+        if not unfinished:
+            # Everything it owned already landed (e.g. died after its last
+            # publish but before ST_DONE) — nothing to recover.
+            return True
+        mode = self.opts.recovery
+        if gated or mode == "none":
+            self._fail(WorkerCrashed(msg))
+            return False
+        t_detect = time.monotonic()
+        if mode == "respawn":
+            if self._respawns_used >= self.opts.max_respawns:
+                self._fail(WorkerCrashed(
+                    f"{msg}; respawn budget exhausted "
+                    f"({self.opts.max_respawns})"))
+                return False
+            return self._respawn_worker(unfinished, msg, t_detect)
+        if mode == "reissue":
+            self._reissue_splinters(unfinished, t_detect)
+            return True
+        self._fail(WorkerCrashed(msg))     # unknown mode: behave as "none"
+        return False
+
+    def _respawn_worker(self, unfinished: List[Splinter], msg: str,
+                        t_detect: float) -> bool:
+        """Spawn a replacement process owning exactly the unfinished tail.
+
+        The replacement attaches to the SAME session arena by name (which
+        is why the arena unlink is deferred under this mode) and to a fresh
+        ring segment of its own, then runs the normal go-gate protocol —
+        its gate opens individually in _check_pending_attach. ``prefault``
+        is off and ``stripe_bounds`` empty: re-touching pages that already
+        hold read data would corrupt them.
+        """
+        import multiprocessing as mp
+        self._respawns_used += 1
+        rb = ring_bytes(self.opts.ring_slots)
+        try:
+            shm = SharedArena.create(rb, tag="ring-r")
+        except OSError as e:
+            self._fail(WorkerCrashed(f"{msg}; respawn failed: {e}"))
+            return False
+        new_w = len(self._procs)
+        ring = EventRing(shm.buf[:rb], self.opts.ring_slots, create=True)
+        spec = WorkerSpec(
+            worker_id=new_w,
+            file_path=self.file.path,
+            arena_path=self._shm.path,
+            arena_bytes=self.plan.nbytes,
+            base_offset=self._base,
+            ring_path=shm.path,
+            ring_region_bytes=rb,
+            ring_offset=0,
+            ring_slots=self.opts.ring_slots,
+            splinters=tuple(unfinished),
+            stripe_bounds=(),
+            prefault=False,
+            pin_cpus=None,
+            delay_model=self.opts.delay_model,
+            fault=self.opts.worker_fault,
+            io_fault=self.opts.io_fault,
+            ring_fault=self.opts.ring_fault,
+            parent_pid=os.getpid(),
+        )
+        ctx = mp.get_context("spawn")
+        p = ctx.Process(target=worker_main, args=(spec,), daemon=True,
+                        name=f"ckio-reader-r{new_w}")
+        try:
+            p.start()
+        except BaseException as e:
+            shm.close()
+            self._fail(WorkerCrashed(f"{msg}; respawn failed: {e}"))
+            return False
+        self._rings.append(ring)
+        self._procs.append(p)
+        self._worker_splinters.append(tuple(unfinished))
+        self._worker_retired.append(False)
+        self._last_progress.append(time.monotonic())
+        self._extra_ring_shms[new_w] = shm
+        self._pending_attach[new_w] = (
+            time.monotonic() + self.opts.worker_attach_timeout, t_detect)
+        self.metrics.recovery.record_respawn(
+            len(unfinished), sum(sp.nbytes for sp in unfinished))
+        return True
+
+    def _check_pending_attach(self) -> bool:
+        """Open the go-gate of each respawned worker as it attaches (its
+        placement phase is empty — no collective barrier to wait for).
+        Returns False only on a terminal attach timeout."""
+        for w in list(self._pending_attach):
+            attach_deadline, t_detect = self._pending_attach[w]
+            if self._rings[w].state() == ST_INIT:
+                if time.monotonic() > attach_deadline:
+                    self._fail(WorkerCrashed(
+                        f"respawned {self._worker_label(w)} failed to "
+                        f"attach within {self.opts.worker_attach_timeout}s"))
+                    return False
+                continue
+            # Attached (or already errored — the dead-child loop will see
+            # ST_ERROR next iteration either way): open its private gate.
+            self._rings[w].open_gate()
+            shm = self._extra_ring_shms.get(w)
+            if shm is not None:
+                shm.unlink()
+            self._last_progress[w] = time.monotonic()
+            self.metrics.recovery.record_recovery_latency(
+                time.monotonic() - t_detect)
+            del self._pending_attach[w]
+        return True
+
+    def _reissue_splinters(self, unfinished: List[Splinter],
+                           t_detect: float) -> None:
+        """Re-read a dead worker's unfinished splinters supervisor-side.
+
+        A surviving worker's splinter list is fixed at spawn (SPSC rings
+        carry no work-push channel), so "reassign to surviving readers"
+        means: an emergency reader thread in THIS process reads the tail
+        through the parent's own fd straight into the mapped arena and
+        re-enters _mark_done — every delivery invariant (waiters,
+        subscriber order, arrival log, zero-copy views) holds because it
+        is the same fan-out path, and ``bytes_copied`` stays 0 because the
+        bytes land in the same shared pages workers write. Worker-side
+        injection hooks (delay_model / worker_fault / io_fault) model the
+        dead worker's environment and deliberately do NOT apply here."""
+        self.metrics.recovery.record_reissue(
+            len(unfinished), sum(sp.nbytes for sp in unfinished))
+        th = threading.Thread(
+            target=self._reissue_main, args=(list(unfinished), t_detect),
+            daemon=True, name="ckio-reissue")
+        self._reissue_threads.append(th)
+        th.start()
+
+    def _reissue_main(self, splinters: List[Splinter],
+                      t_detect: float) -> None:
+        try:
+            for sp in splinters:
+                if self._cancelled or self.error is not None:
+                    return
+                t0 = time.perf_counter()
+                lo = sp.offset - self._base
+                view = memoryview(self._arena)[lo: lo + sp.nbytes]
+                n = self.file.pread_into(sp.offset, view,
+                                         stats=self.metrics.recovery)
+                dt = time.perf_counter() - t0
+                if n != sp.nbytes:
+                    raise IOError(
+                        f"short read re-issuing splinter {sp.index}: "
+                        f"wanted {sp.nbytes} at {sp.offset}, got {n}")
+                self.metrics.record_read(sp.reader, sp.nbytes, dt)
+                if self.opts.topology is not None:
+                    self.locality.record_splinter(sp.reader, sp.nbytes)
+                self._mark_done(sp)
+            self.metrics.recovery.record_recovery_latency(
+                time.monotonic() - t_detect)
+        except BaseException as e:
+            self._fail(WorkerCrashed(f"splinter re-issue failed: {e}"))
+
+    def _watchdog_sweep(self) -> None:
+        """SIGKILL any live worker that owns unfinished splinters but has
+        published nothing for ``worker_watchdog_s`` — a hung pread (dying
+        FS) or a stalled process. The dead-child loop then converts the
+        kill into recovery (or a terminal failure under recovery="none",
+        which still turns a silent hang into a descriptive error)."""
+        wd = self.opts.worker_watchdog_s
+        if wd <= 0:
+            return
+        now = time.monotonic()
+        for w in range(len(self._procs)):
+            if self._worker_retired[w] or w in self._pending_attach:
+                continue
+            p, ring = self._procs[w], self._rings[w]
+            if ring.state() in (ST_DONE, ST_ERROR) or not p.is_alive():
+                continue
+            if now - self._last_progress[w] <= wd:
+                continue
+            if not self._unfinished(w):
+                continue
+            self.metrics.recovery.record_watchdog_kill()
+            p.kill()
+            p.join(5.0)
+
     def _shutdown_workers(self) -> None:
         """Graceful drain, then SIGKILL-on-timeout; releases ring mappings."""
+        if self._workers_shutdown:
+            return
+        self._workers_shutdown = True
         rings, procs = self._rings, self._procs
         for ring in rings:
             ring.request_stop()
@@ -1014,9 +1315,22 @@ class ProcessReaderSet(BufferReaderSet):
             if p.pid is not None and p.is_alive():
                 p.kill()
                 p.join(5.0)
+        # Emergency re-issue readers exit between splinters once cancel or
+        # completion lands; join them before the arena mapping goes away.
+        for th in self._reissue_threads:
+            if th.is_alive():
+                th.join(5.0)
+        # Fold each worker's transient-I/O counters (ring header words)
+        # into the session's recovery metrics — exactly once, guarded by
+        # _workers_shutdown above.
+        for ring in rings:
+            r, s = ring.io_report()
+            if r or s:
+                self.metrics.recovery.add_worker_io(r, s)
         # Workers are gone: the names can't be needed again. Unlink here
         # too (idempotent) so a session that failed before the gate opened
-        # still leaves nothing behind in /dev/shm.
+        # still leaves nothing behind in /dev/shm. Under recovery="respawn"
+        # this is where the deferred arena unlink happens.
         if self._shm is not None:
             self._shm.unlink()
         # Drop the parent-side ring views before closing their mapping (a
@@ -1026,3 +1340,6 @@ class ProcessReaderSet(BufferReaderSet):
         if self._rings_shm is not None:
             self._rings_shm.close()
             self._rings_shm = None
+        for shm in self._extra_ring_shms.values():
+            shm.close()                # idempotent unlink + unmap
+        self._extra_ring_shms = {}

@@ -12,12 +12,13 @@ from __future__ import annotations
 
 import itertools
 import threading
+import warnings
 from typing import Callable, Dict, List, Optional
 
 from repro.core.assembler import ReadAssembler
 from repro.core.buffers import BufferReaderSet, ProcessReaderSet
 from repro.core.futures import CkCallback
-from repro.core.metrics import LocalityMetrics, SessionMetrics
+from repro.core.metrics import LocalityMetrics, RecoveryMetrics, SessionMetrics
 from repro.core.placement import place_readers
 from repro.core.scheduler import TaskScheduler
 from repro.core.session import FileHandle, FileOptions, Session
@@ -68,6 +69,10 @@ class Director:
         # per-reader splinter histograms) so benchmarks/drivers can read
         # one object after many sessions.
         self.locality = LocalityMetrics()
+        # Director-lifetime fault-recovery aggregate (respawns, re-issued
+        # splinters, I/O retries, degraded sessions) — same merge-on-close
+        # pattern as ``locality``.
+        self.recovery = RecoveryMetrics()
 
     def add_observer(self, observe: Callable[[SessionMetrics], None]) -> None:
         """Register a session-close observer on the shared observation path
@@ -119,8 +124,6 @@ class Director:
                 # Global coordination (paper §III-C.1): serialize the greedy
                 # read kick-off of concurrent sessions on distinct files.
                 self._sequence_lock.acquire()
-            sid = None
-            readers = None
             try:
                 splinter_bytes = opts.splinter_bytes
                 reader_sizes = None
@@ -144,44 +147,46 @@ class Director:
                     opts.placement, plan.num_readers, self.sched,
                     consumer_pes, topology=opts.topology,
                 )
-                with self._lock:
-                    sid = next(self._session_ids)
                 # Backend dispatch: same supervisor-facing interface,
                 # different execution substrate (helper threads vs worker
                 # processes over a shared-memory arena — core/buffers.py
-                # ProcessReaderSet).
-                reader_cls = (ProcessReaderSet if opts.backend == "process"
-                              else BufferReaderSet)
-                readers = reader_cls(
-                    file.posix, plan, self.sched, reader_pes,
-                    opts.reader_options()
-                )
-                session = Session(
-                    id=sid,
-                    file=file,
-                    plan=plan,
-                    readers=readers,
-                    opts=opts,
-                    reader_pes=reader_pes,
-                    metrics=readers.metrics,
-                )
-                with self._lock:
-                    self.sessions[sid] = session
-                # Greedy prefetch begins NOW — before any client request
-                # exists.
-                readers.start()
-            except BaseException:
-                # A failed start (e.g. the process backend's spawn
-                # rejecting an unpicklable hook) must not leave a
-                # half-created session in the tables or backend resources
-                # mapped; the exception still propagates to the caller's
-                # pump.
-                if sid is not None:
-                    with self._lock:
-                        self.sessions.pop(sid, None)
-                if readers is not None:
-                    readers.release()
-                raise
+                # ProcessReaderSet). A FileOptions whose process backend
+                # already fell back (degraded mode is sticky per
+                # FileOptions) goes straight to the thread backend without
+                # re-attempting — and re-warning about — the spawn.
+                ropts = opts.reader_options()
+                degraded = (opts.backend == "process"
+                            and getattr(opts, "_fallback_active", False))
+                if degraded:
+                    ropts.backend = "thread"
+                try:
+                    session = self._build_session(
+                        file, plan, reader_pes, opts, ropts)
+                except Exception as exc:
+                    # Graceful degradation (opt-in): a process-backend
+                    # *setup* failure — spawn rejecting an unpicklable
+                    # hook, shm exhaustion — downgrades to the in-process
+                    # thread backend instead of failing the session.
+                    # Post-start worker crashes are NOT handled here; they
+                    # are the recovery layer's job (ReaderOptions.recovery).
+                    if (ropts.backend != "process"
+                            or opts.fallback_backend != "thread"):
+                        raise
+                    if not getattr(opts, "_warned_fallback", False):
+                        opts._warned_fallback = True
+                        warnings.warn(
+                            f"process reader backend failed at session "
+                            f"start ({exc}); falling back to "
+                            f"backend='thread' for this file (degraded "
+                            f"mode)", RuntimeWarning)
+                    opts._fallback_active = True
+                    degraded = True
+                    ropts = opts.reader_options()
+                    ropts.backend = "thread"
+                    session = self._build_session(
+                        file, plan, reader_pes, opts, ropts)
+                if degraded:
+                    session.metrics.recovery.mark_degraded()
             finally:
                 # Always released — an exception above would otherwise
                 # deadlock every future sequenced session start.
@@ -223,6 +228,10 @@ class Director:
             # Backend teardown (no-op for threads; the process backend
             # joins its supervisor and unmaps the shm segments here).
             session.readers.release()
+            # Merge AFTER release: the process backend's worker I/O
+            # counters are folded into the session metrics by its
+            # supervisor teardown, which release() joins.
+            self.recovery.merge(session.metrics.recovery)
             session.closed = True
             with self._lock:
                 self.sessions.pop(session.id, None)
@@ -244,3 +253,40 @@ class Director:
             )
 
         self.sched.enqueue(0, do_close, label="ckio-close-session")
+
+    # -- session construction --------------------------------------------------
+    def _build_session(self, file: FileHandle, plan, reader_pes: List[int],
+                       opts: FileOptions, ropts) -> Session:
+        """Allocate an id, construct the reader set for ``ropts.backend``,
+        register and start it. On any failure the half-created session is
+        scrubbed from the tables and backend resources released before the
+        exception propagates (so a fallback retry starts clean)."""
+        with self._lock:
+            sid = next(self._session_ids)
+        readers = None
+        try:
+            reader_cls = (ProcessReaderSet if ropts.backend == "process"
+                          else BufferReaderSet)
+            readers = reader_cls(file.posix, plan, self.sched,
+                                 reader_pes, ropts)
+            session = Session(
+                id=sid,
+                file=file,
+                plan=plan,
+                readers=readers,
+                opts=opts,
+                reader_pes=reader_pes,
+                metrics=readers.metrics,
+            )
+            with self._lock:
+                self.sessions[sid] = session
+            # Greedy prefetch begins NOW — before any client request
+            # exists.
+            readers.start()
+            return session
+        except BaseException:
+            with self._lock:
+                self.sessions.pop(sid, None)
+            if readers is not None:
+                readers.release()
+            raise

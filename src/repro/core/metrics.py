@@ -21,6 +21,143 @@ from typing import Dict, List, Optional
 
 
 @dataclass
+class RecoveryMetrics:
+    """Fault-recovery accounting for the reader runtime.
+
+    One instance per reader set (``SessionMetrics.recovery``), merged into
+    a Director-lifetime aggregate on session close — the observables of the
+    recovery layer, proving what it absorbed instead of letting faults pass
+    silently:
+
+    * ``respawns`` / ``reissues`` — recovery events by kind: a dead or
+      watchdog-killed worker replaced by a fresh process attached to the
+      *same* arena, vs its unfinished splinters re-read supervisor-side.
+      ``reissued_splinters`` / ``reissued_bytes`` total the re-routed work
+      for both kinds (a respawn also re-issues the unfinished tail, just
+      to a new process).
+    * ``io_retries`` / ``retried_errnos`` — transient pread errors absorbed
+      by the posix backoff layer *in this process*; ``worker_io_retries`` /
+      ``worker_suppressed`` — the same counters folded in from reader
+      worker processes through their ring headers.
+    * ``suppressed_errors`` — advisory (fadvise-class) errors swallowed by
+      design but counted, never silent.
+    * ``watchdog_kills`` — hung workers killed by the supervisor's
+      no-progress watchdog (each then flows through respawn/reissue).
+    * ``recovery_latency_s`` — summed seconds from failure detection to
+      restored read capacity (replacement gate-open, or the re-issued tail
+      fully landed).
+    * ``degraded_mode`` — this session ran on the thread backend because
+      ``backend="process"`` setup failed and ``fallback_backend`` allowed
+      the downgrade.
+
+    Duck-typing: ``record_io_retry``/``record_suppressed`` match the stats
+    protocol of ``io/posix.py``, so a session's RecoveryMetrics can be
+    passed directly as a pread ``stats`` sink.
+    """
+
+    lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    respawns: int = 0
+    reissues: int = 0
+    reissued_splinters: int = 0
+    reissued_bytes: int = 0
+    io_retries: int = 0
+    retried_errnos: Dict[int, int] = field(default_factory=dict)
+    suppressed_errors: int = 0
+    worker_io_retries: int = 0
+    worker_suppressed: int = 0
+    watchdog_kills: int = 0
+    recovery_latency_s: float = 0.0
+    degraded_mode: bool = False
+
+    def record_io_retry(self, err: Optional[int] = None) -> None:
+        with self.lock:
+            self.io_retries += 1
+            if err is not None:
+                self.retried_errnos[err] = self.retried_errnos.get(err, 0) + 1
+
+    def record_suppressed(self, err: Optional[int] = None) -> None:
+        with self.lock:
+            self.suppressed_errors += 1
+
+    def record_respawn(self, nsplinters: int, nbytes: int) -> None:
+        with self.lock:
+            self.respawns += 1
+            self.reissued_splinters += nsplinters
+            self.reissued_bytes += nbytes
+
+    def record_reissue(self, nsplinters: int, nbytes: int) -> None:
+        with self.lock:
+            self.reissues += 1
+            self.reissued_splinters += nsplinters
+            self.reissued_bytes += nbytes
+
+    def record_watchdog_kill(self) -> None:
+        with self.lock:
+            self.watchdog_kills += 1
+
+    def record_recovery_latency(self, seconds: float) -> None:
+        with self.lock:
+            self.recovery_latency_s += max(seconds, 0.0)
+
+    def add_worker_io(self, retries: int, suppressed: int) -> None:
+        """Fold one worker ring's header counters in (once per ring)."""
+        with self.lock:
+            self.worker_io_retries += retries
+            self.worker_suppressed += suppressed
+
+    def mark_degraded(self) -> None:
+        with self.lock:
+            self.degraded_mode = True
+
+    def recoveries(self) -> int:
+        with self.lock:
+            return self.respawns + self.reissues
+
+    def merge(self, other: "RecoveryMetrics") -> None:
+        """Fold ``other`` (a finished session's counters) into this one."""
+        with other.lock:
+            snap = (
+                other.respawns, other.reissues, other.reissued_splinters,
+                other.reissued_bytes, other.io_retries,
+                dict(other.retried_errnos), other.suppressed_errors,
+                other.worker_io_retries, other.worker_suppressed,
+                other.watchdog_kills, other.recovery_latency_s,
+                other.degraded_mode,
+            )
+        with self.lock:
+            self.respawns += snap[0]
+            self.reissues += snap[1]
+            self.reissued_splinters += snap[2]
+            self.reissued_bytes += snap[3]
+            self.io_retries += snap[4]
+            for err, c in snap[5].items():
+                self.retried_errnos[err] = self.retried_errnos.get(err, 0) + c
+            self.suppressed_errors += snap[6]
+            self.worker_io_retries += snap[7]
+            self.worker_suppressed += snap[8]
+            self.watchdog_kills += snap[9]
+            self.recovery_latency_s += snap[10]
+            self.degraded_mode = self.degraded_mode or snap[11]
+
+    def summary(self) -> Dict[str, float]:
+        with self.lock:
+            return {
+                "respawns": float(self.respawns),
+                "reissues": float(self.reissues),
+                "recoveries": float(self.respawns + self.reissues),
+                "reissued_splinters": float(self.reissued_splinters),
+                "reissued_bytes": float(self.reissued_bytes),
+                "io_retries": float(self.io_retries),
+                "worker_io_retries": float(self.worker_io_retries),
+                "suppressed_errors": float(self.suppressed_errors),
+                "worker_suppressed": float(self.worker_suppressed),
+                "watchdog_kills": float(self.watchdog_kills),
+                "recovery_latency_s": self.recovery_latency_s,
+                "degraded_mode": float(self.degraded_mode),
+            }
+
+
+@dataclass
 class SessionMetrics:
     lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
     session_bytes: int = 0
@@ -56,6 +193,10 @@ class SessionMetrics:
     piece_timing_every: int = 0       # 0 = timing off; N = time every Nth piece
     requests: int = 0
     request_latencies_s: List[float] = field(default_factory=list)
+    # Fault-recovery observables (respawns, re-issued splinters, I/O
+    # retries, …); travels the same Director observer path as the rest of
+    # the session counters. Has its own lock.
+    recovery: RecoveryMetrics = field(default_factory=RecoveryMetrics)
     _piece_seq: int = 0               # sampling counter (racy by design)
 
     def session_started(self, nbytes: int, num_readers: int) -> None:

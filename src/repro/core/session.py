@@ -5,6 +5,7 @@ from dataclasses import dataclass, field
 from typing import List, Optional
 
 from repro.core.buffers import BufferReaderSet, NetworkModel, ReaderOptions
+from repro.core.faults import FaultPlan
 from repro.core.metrics import SessionMetrics
 from repro.core.placement import Topology
 from repro.io.layout import StripePlan
@@ -61,12 +62,53 @@ class FileOptions:
     # Without a topology: zero-fill the arena up front (legacy seed path).
     # With a topology: per-stripe first-touch on the owning reader thread.
     prefault_arena: bool = False
+    # -- fault tolerance ------------------------------------------------------
+    # process backend: post-gate worker-failure policy — "none" (fail fast,
+    # the default), "respawn" (replacement process, same arena, bounded by
+    # max_respawns) or "reissue" (supervisor re-reads the unfinished tail).
+    # See core.buffers.ProcessReaderSet.
+    recovery: str = "none"
+    max_respawns: int = 2
+    # process backend: no-progress watchdog (seconds; 0 = off) — a hung
+    # worker is SIGKILLed and then handled per ``recovery``.
+    worker_watchdog_s: float = 0.0
+    # Opt-in degraded mode: when backend="process" setup fails (spawn or
+    # shm errors), rebuild the session on this backend instead of raising.
+    # Only "thread" (or None = no fallback) is valid; warns once per
+    # FileOptions and sets RecoveryMetrics.degraded_mode on each session.
+    fallback_backend: Optional[str] = None
+    # Fault-injection hooks for the lower layers (picklable for the
+    # process backend; core/faults.py): io_fault → PosixFile.pread_into,
+    # ring_fault → EventRing.publish.
+    io_fault: object = None
+    ring_fault: object = None
+    # A seeded core.faults.FaultPlan: expands into worker_fault /
+    # delay_model / io_fault / ring_fault for any hook not set explicitly
+    # (explicit hooks win). The deterministic-replay entry point.
+    fault_plan: Optional[FaultPlan] = None
 
     def reader_options(self) -> ReaderOptions:
         if self.backend not in ("thread", "process"):
             raise ValueError(
                 f"unknown reader backend {self.backend!r} "
                 f"(expected 'thread' or 'process')")
+        if self.recovery not in ("none", "respawn", "reissue"):
+            raise ValueError(
+                f"unknown recovery mode {self.recovery!r} "
+                f"(expected 'none', 'respawn' or 'reissue')")
+        if self.fallback_backend not in (None, "thread"):
+            raise ValueError(
+                f"unknown fallback backend {self.fallback_backend!r} "
+                f"(expected None or 'thread')")
+        worker_fault = self.worker_fault
+        delay_model = self.delay_model
+        io_fault = self.io_fault
+        ring_fault = self.ring_fault
+        if self.fault_plan is not None:
+            worker_fault = worker_fault or self.fault_plan.worker_fault()
+            delay_model = delay_model or self.fault_plan.delay_model()
+            io_fault = io_fault or self.fault_plan.io_fault()
+            ring_fault = ring_fault or self.fault_plan.ring_fault()
         return ReaderOptions(
             splinter_bytes=self.splinter_bytes,
             work_stealing=self.work_stealing,
@@ -74,10 +116,15 @@ class FileOptions:
             backend=self.backend,
             max_workers=self.max_workers,
             ring_slots=self.ring_slots,
-            worker_fault=self.worker_fault,
+            worker_fault=worker_fault,
             worker_attach_timeout=self.worker_attach_timeout,
             worker_stop_timeout=self.worker_stop_timeout,
-            delay_model=self.delay_model,  # type: ignore[arg-type]
+            recovery=self.recovery,
+            max_respawns=self.max_respawns,
+            worker_watchdog_s=self.worker_watchdog_s,
+            io_fault=io_fault,
+            ring_fault=ring_fault,
+            delay_model=delay_model,  # type: ignore[arg-type]
             network=self.network,
             piece_timing_every=self.piece_timing_every,
             topology=self.topology,

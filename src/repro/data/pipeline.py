@@ -121,21 +121,51 @@ arriving over cross-process rings instead of in-process callbacks.
 ``bytes_copied`` stays 0 *in this consumer process*: the views ``np``
 arrays and staged chunks alias are the mapped segment itself.
 
-Shm view lifetime contract (the cross-process sharpening of the rules
-below):
+Shm view lifetime and failure-semantics contract (the cross-process
+sharpening of the rules below):
 
   * a borrowed view into the shm arena is valid until **its session
     closes**, exactly like the thread backend — session close releases
     the view and unmaps the segment (pages a staged transfer still pins
     survive until that exporter is dropped at the next ``get_batch*``);
-  * a **worker crash fails the session** (descriptive ``WorkerCrashed``
-    raised from the blocked call within the supervisor's poll interval —
-    no hang); there is no in-place worker respawn: a respawned session is
-    a *new* session with a *new* mapping, so any view of the dead
-    session's arena is invalid — re-read through the new session instead
-    of holding views across a failure;
   * worker processes never inherit fds: each opens the data file and the
     shm segments by name (``io/posix.py`` fd-hygiene notes).
+
+Worker death now splits into **recoverable** and **terminal** (see
+``FileOptions.recovery`` and ``core.buffers.ProcessReaderSet``):
+
+  * **recoverable** (``recovery="respawn"`` or ``"reissue"``, post-gate
+    crash/hang within budget): the failure is *invisible* at this layer.
+    A replacement worker attaches to the **same arena mapping** (respawn)
+    or the supervisor re-reads the unfinished tail in-process (reissue),
+    so the session completes bit-identically: borrowed views and staged
+    chunks handed out before the crash stay valid (same pages),
+    ``bytes_copied`` stays 0, and splinter subscriptions observe **each
+    splinter exactly once** — arrival *order* may change (the recovered
+    tail lands late) but replay/barrier semantics and the
+    arrival-order→file-order device reassembly are order-agnostic by
+    construction. Recovery is visible only in
+    ``session.metrics.recovery`` (respawns, re-issued splinters/bytes,
+    recovery latency);
+  * **terminal** (default ``recovery="none"``, respawn budget exhausted,
+    or an attach-phase death — the placement barrier cannot re-run): a
+    descriptive ``WorkerCrashed`` is raised from every blocked
+    ``read``/``get_batch*`` call within the supervisor's poll interval —
+    no hang, no partial delivery. The failed session is unusable: its
+    borrowed views die at session close as usual, staged chunks of the
+    failed step are dropped when the pipeline retires it, and
+    subscriptions receive no further events. A *new* session has a *new*
+    mapping, so never hold views across a terminal failure — re-read
+    through the new session (``train/fault.py`` StepSupervisor does
+    exactly this: ``WorkerCrashed`` from the batch path counts as a step
+    failure, the optional ``input_recover`` hook rebuilds the pipeline,
+    and the step replays from the last checkpoint);
+  * **degraded mode** (``fallback_backend="thread"``): a process-backend
+    *setup* failure (spawn/shm errors) rebuilds the session on the
+    in-process thread backend instead of raising — one ``RuntimeWarning``
+    per FileOptions, ``metrics.recovery.degraded_mode`` set, every
+    delivery contract above unchanged (the thread backend shares the
+    borrowed-view machinery).
 
 Lifetime rules:
   * the returned ``(inputs, labels)`` are ordinary JAX device arrays — they

@@ -5,12 +5,35 @@ shared by many reader threads without seek races — this mirrors the paper's
 buffer chares each reading a disjoint section of one shared file. ``os.pread``
 releases the GIL for the duration of the syscall, which is what lets helper
 I/O threads overlap with host-side compute (paper §III-C.4).
+
+Transient-error handling (the recovery layer's lowest rung)
+-----------------------------------------------------------
+At scale the dominant failure class is *transient* device/FS errors —
+``EINTR``/``EAGAIN`` from signal/async plumbing and sporadic ``EIO`` from a
+flaky path to storage. Every pread here therefore runs under a
+:class:`RetryPolicy`: a failed syscall whose errno is in the policy's set is
+retried with exponential backoff, capped both by a retry count and a
+per-call wall-clock deadline, so a *persistently* failing device still
+surfaces its error promptly instead of spinning. Retries are **counted,
+never silent**: each call takes a ``stats`` sink (duck-typed —
+``record_io_retry(errno)`` / ``record_suppressed(errno)``; the reader layer
+passes its session's ``RecoveryMetrics``) falling back to the module-level
+:data:`IO_EVENTS` aggregate so no suppression is ever dropped on the floor.
+
+Fault injection: ``pread_into``/``pread`` consult an optional ``fault``
+hook (``(offset, nbytes) -> Optional[int]``, may raise ``OSError``) before
+each syscall — the deterministic short-read / flaky-EIO injection point
+used by ``core/faults.py`` (picklable, so it also ships to reader worker
+processes through ``WorkerSpec.io_fault``).
 """
 from __future__ import annotations
 
+import errno
 import os
 import threading
+import time
 from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
 
 # Typical FS block size; stripe/splinter boundaries are aligned to this when
 # possible to avoid read-modify-write amplification on the storage side.
@@ -30,6 +53,67 @@ def aligned_floor(nbytes: int, align: int = DEFAULT_ALIGN) -> int:
 # back to the allocate-then-copy pread path (also used by benchmarks to
 # measure the cost of that extra copy).
 HAVE_PREADV = hasattr(os, "preadv")
+
+# fadvise errnos that mean "this file/FS does not support the hint" — the
+# only OSErrors the advisory helpers may swallow (counted, see IO_EVENTS).
+# Anything else (EBADF — a closed/reused descriptor — above all) is a bug
+# in the caller and propagates.
+_FADVISE_SUPPRESS = (
+    errno.EINVAL,
+    errno.ESPIPE,
+    errno.ENOSYS,
+    errno.EOPNOTSUPP,
+    getattr(errno, "ENOTSUP", errno.EOPNOTSUPP),
+)
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Deadline-capped exponential backoff for transient I/O errors.
+
+    A syscall failing with an errno in ``errnos`` is retried up to
+    ``max_retries`` times, sleeping ``base_backoff_s`` doubled per attempt
+    (capped at ``max_backoff_s``), but never past ``deadline_s`` of total
+    wall time for one logical call — a dead device fails fast, a blip is
+    absorbed. ``EINTR`` is included for completeness (Python retries it
+    itself since PEP 475, but a custom signal handler raising keeps it
+    reachable); ``EAGAIN`` covers O_NONBLOCK-ish paths; ``EIO`` is the
+    transient-media class Cloud's survey names dominant at scale."""
+
+    max_retries: int = 4
+    base_backoff_s: float = 0.5e-3
+    max_backoff_s: float = 20e-3
+    deadline_s: float = 2.0
+    errnos: Tuple[int, ...] = (errno.EINTR, errno.EAGAIN, errno.EIO)
+
+
+class IOEventCounts:
+    """Process-wide fallback sink for retry/suppression counts.
+
+    Callers that have a session context pass their own sink (the session's
+    ``RecoveryMetrics``); everything else lands here so no suppressed error
+    or retry is ever silently dropped. Thread-safe."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.retries = 0
+        self.suppressed = 0
+        self.by_errno: Dict[int, int] = {}
+
+    def record_io_retry(self, err: Optional[int] = None) -> None:
+        with self._lock:
+            self.retries += 1
+            if err is not None:
+                self.by_errno[err] = self.by_errno.get(err, 0) + 1
+
+    def record_suppressed(self, err: Optional[int] = None) -> None:
+        with self._lock:
+            self.suppressed += 1
+            if err is not None:
+                self.by_errno[err] = self.by_errno.get(err, 0) + 1
+
+
+IO_EVENTS = IOEventCounts()
 
 
 @dataclass
@@ -67,6 +151,14 @@ class PosixFile:
     # When False (or when the platform lacks os.preadv) pread_into uses the
     # allocate-then-copy fallback; benchmarks flip this to quantify the copy.
     use_preadv: bool = True
+    # Transient-error retry policy for every pread through this handle.
+    retry: RetryPolicy = field(default_factory=RetryPolicy)
+    # Test/bench fault hook consulted before each syscall:
+    # ``(abs_offset, nbytes) -> Optional[int]`` — return a byte cap to force
+    # a short read, raise OSError to inject a (possibly transient) failure.
+    # Per-call ``fault=`` overrides this; reader workers set it from
+    # ``WorkerSpec.io_fault`` (core/faults.py hooks are picklable).
+    fault: Optional[object] = None
     _refcount: int = 0
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
@@ -82,13 +174,32 @@ class PosixFile:
         with self._lock:
             self._refcount += 1
 
-    def pread(self, offset: int, nbytes: int) -> bytes:
-        """Positional read; safe from any thread; releases the GIL."""
+    def pread(self, offset: int, nbytes: int, *, stats=None) -> bytes:
+        """Positional read; safe from any thread; releases the GIL.
+        Transient errors retry under ``self.retry`` (counted in ``stats``,
+        default the module aggregate)."""
         if nbytes <= 0:
             return b""
-        return os.pread(self.fd, nbytes, offset)
+        sink = stats if stats is not None else IO_EVENTS
+        pol = self.retry
+        attempts, pause, deadline = 0, pol.base_backoff_s, None
+        while True:
+            try:
+                return os.pread(self.fd, nbytes, offset)
+            except OSError as e:
+                if e.errno not in pol.errnos:
+                    raise
+                if deadline is None:
+                    deadline = time.monotonic() + pol.deadline_s
+                attempts += 1
+                if attempts > pol.max_retries or time.monotonic() > deadline:
+                    raise
+                sink.record_io_retry(e.errno)
+                time.sleep(pause)
+                pause = min(pause * 2.0, pol.max_backoff_s)
 
-    def pread_into(self, offset: int, view: memoryview) -> int:
+    def pread_into(self, offset: int, view: memoryview, *,
+                   stats=None, fault=None) -> int:
         """Positional read into a caller-provided buffer — zero intermediate
         copies on the preadv path.
 
@@ -96,38 +207,84 @@ class PosixFile:
         e.g. across page-cache/readahead boundaries) and stops at EOF, so the
         return value is only < len(view) when the file genuinely ends inside
         the range. Safe from any thread; releases the GIL per syscall.
+
+        Transient errors (``self.retry.errnos``) are retried per syscall
+        with deadline-capped exponential backoff; each retry is counted in
+        ``stats`` (``record_io_retry``), defaulting to :data:`IO_EVENTS`.
+        ``fault`` (default ``self.fault``) is the injection hook — it may
+        cap a syscall's length (short read) or raise ``OSError`` (which
+        then flows through the same retry machinery a real error would).
         """
         want = len(view)
         total = 0
-        if self.use_preadv and HAVE_PREADV:
-            while total < want:
-                got = os.preadv(self.fd, [view[total:]], offset + total)
-                if got <= 0:          # EOF (0); preadv never returns <0 in py
-                    break
-                total += got
-            return total
-        # Fallback: os.pread allocates a bytes object we must copy out of.
+        sink = stats if stats is not None else IO_EVENTS
+        hook = fault if fault is not None else self.fault
+        pol = self.retry
+        use_v = self.use_preadv and HAVE_PREADV
         while total < want:
-            data = os.pread(self.fd, want - total, offset + total)
-            if not data:              # EOF
+            attempts, pause, deadline = 0, pol.base_backoff_s, None
+            while True:
+                cap = want - total
+                try:
+                    if hook is not None:
+                        c = hook(offset + total, cap)
+                        if c is not None:
+                            cap = max(1, min(cap, int(c)))
+                    if use_v:
+                        got = os.preadv(
+                            self.fd, [view[total: total + cap]], offset + total
+                        )
+                    else:
+                        # Fallback: os.pread allocates a bytes object we
+                        # must copy out of.
+                        data = os.pread(self.fd, cap, offset + total)
+                        got = len(data)
+                        if got:
+                            view[total: total + got] = data
+                    break
+                except OSError as e:
+                    if e.errno not in pol.errnos:
+                        raise
+                    if deadline is None:
+                        deadline = time.monotonic() + pol.deadline_s
+                    attempts += 1
+                    if attempts > pol.max_retries or \
+                            time.monotonic() > deadline:
+                        raise
+                    sink.record_io_retry(e.errno)
+                    time.sleep(pause)
+                    pause = min(pause * 2.0, pol.max_backoff_s)
+            if got <= 0:              # EOF (preadv never returns <0 in py)
                 break
-            view[total : total + len(data)] = data
-            total += len(data)
+            total += got
         return total
 
-    def advise_sequential(self, offset: int, nbytes: int) -> bool:
+    def advise_sequential(self, offset: int, nbytes: int, *,
+                          stats=None) -> bool:
         """Hint the kernel that ``[offset, offset+nbytes)`` will be read
         sequentially and soon (``POSIX_FADV_SEQUENTIAL`` doubles readahead,
         ``WILLNEED`` starts it). Called once per reader stripe on session
-        start; best-effort — returns False where unsupported."""
+        start; best-effort — returns False where unsupported.
+
+        Only the *intended* gaps are swallowed: a platform without
+        ``posix_fadvise`` (AttributeError) and the does-not-support-hints
+        errnos (counted in ``stats``/:data:`IO_EVENTS`, never silent).
+        Anything else — ``EBADF`` above all — propagates: it means a bug,
+        not an unsupported FS."""
         try:
-            os.posix_fadvise(
-                self.fd, offset, nbytes, os.POSIX_FADV_SEQUENTIAL
-            )
-            os.posix_fadvise(self.fd, offset, nbytes, os.POSIX_FADV_WILLNEED)
-            return True
-        except (AttributeError, OSError):
+            fadvise = os.posix_fadvise
+        except AttributeError:        # platform gap — nothing to count
             return False
+        sink = stats if stats is not None else IO_EVENTS
+        try:
+            fadvise(self.fd, offset, nbytes, os.POSIX_FADV_SEQUENTIAL)
+            fadvise(self.fd, offset, nbytes, os.POSIX_FADV_WILLNEED)
+            return True
+        except OSError as e:
+            if e.errno in _FADVISE_SUPPRESS:
+                sink.record_suppressed(e.errno)
+                return False
+            raise
 
     def close(self) -> None:
         with self._lock:
@@ -153,20 +310,37 @@ def write_file(path: str, data: bytes, *, sync: bool = False) -> None:
             os.fsync(f.fileno())
 
 
-def drop_page_cache(path: str) -> bool:
+def drop_page_cache(path: str, *, stats=None) -> bool:
     """Best-effort eviction of a file from the OS page cache.
 
     Benchmarks call this between trials so that throughput numbers measure the
     storage path rather than DRAM. Uses ``posix_fadvise(DONTNEED)``; returns
     False when unsupported (results then measure warm-cache behaviour, which
-    the benchmark records).
+    the benchmark records). Suppressed errors are counted (``stats`` /
+    :data:`IO_EVENTS`): the swallowed set is the fadvise
+    unsupported-hint errnos plus a missing/unreadable path — an unexpected
+    errno propagates instead of masquerading as "cache not dropped".
     """
+    sink = stats if stats is not None else IO_EVENTS
+    try:
+        fadvise = os.posix_fadvise
+    except AttributeError:            # platform gap — nothing to count
+        return False
     try:
         fd = os.open(path, os.O_RDONLY)
+    except OSError as e:
+        if e.errno in (errno.ENOENT, errno.EACCES, errno.EPERM, errno.EISDIR):
+            sink.record_suppressed(e.errno)
+            return False
+        raise
+    try:
         try:
-            os.posix_fadvise(fd, 0, 0, os.POSIX_FADV_DONTNEED)
-        finally:
-            os.close(fd)
-        return True
-    except (AttributeError, OSError):
-        return False
+            fadvise(fd, 0, 0, os.POSIX_FADV_DONTNEED)
+        except OSError as e:
+            if e.errno in _FADVISE_SUPPRESS:
+                sink.record_suppressed(e.errno)
+                return False
+            raise
+    finally:
+        os.close(fd)
+    return True

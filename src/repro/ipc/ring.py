@@ -50,7 +50,7 @@ from dataclasses import dataclass
 from typing import Callable, List, Optional
 
 # -- layout -------------------------------------------------------------------
-HDR_BYTES = 64           # 8 u64 fields
+HDR_BYTES = 80           # 10 u64 fields
 MSG_BYTES = 192          # worker error message (UTF-8, truncated)
 SLOT_BYTES = 64          # stamp + 7 payload words
 _WORD = struct.Struct("<Q")
@@ -67,6 +67,8 @@ _OFF_PID = 32
 _OFF_GO = 40             # parent-owned: start gate
 _OFF_STOP = 48           # parent-owned: drain request
 _OFF_PAGES = 56          # worker-reported: first-touched pages << 2 | pin
+_OFF_IO_RETRIES = 64     # worker-reported: transient preads retried
+_OFF_IO_SUPPRESSED = 72  # worker-reported: advisory errors suppressed
 
 # worker lifecycle states (_OFF_STATE)
 ST_INIT = 0
@@ -126,6 +128,13 @@ class EventRing:
             raise ValueError("ring needs at least one slot")
         self._buf = buf
         self.slots = slots
+        # Producer-side fault hook (``seq -> bool``): when truthy for a
+        # sequence, publish() inverts its store order — stamp first, then a
+        # ``delay_s`` pause, then the payload — so the consumer observes a
+        # stamped slot whose CRC does not match. This is the deterministic
+        # torn/stale-slot injector (core/faults.py TornSlot): the consumer
+        # must retry the slot, never deliver it torn, never deadlock.
+        self.fault: Optional[Callable[[int], bool]] = None
         if create:
             buf[:need] = b"\x00" * need
             _WORD.pack_into(buf, _OFF_CAP, slots)
@@ -182,6 +191,17 @@ class EventRing:
             ev.t_arrival, ev.read_dt,
         )
         payload = record[8:]
+        if self.fault is not None and self.fault(seq):
+            # Injected torn publication: make the stamp visible while the
+            # slot still holds the previous lap's payload (what a weakly-
+            # ordered host could expose). The stamp's seq-keyed CRC cannot
+            # match until the payload store below lands, so a correct
+            # consumer retries the slot across the delay window.
+            _WORD.pack_into(self._buf, off, _stamp(seq, payload))
+            time.sleep(getattr(self.fault, "delay_s", 2e-3))
+            self._buf[off + 8: off + SLOT_BYTES] = payload
+            self._set(_OFF_HEAD, seq + 1)
+            return True
         self._buf[off + 8: off + SLOT_BYTES] = payload
         # Publication point: the stamp (seq | seq-keyed payload CRC) makes
         # the record consumable. The consumer re-derives the CRC from the
@@ -200,6 +220,14 @@ class EventRing:
     def set_touch(self, pages: int, pin: int = PIN_NONE) -> None:
         """Report first-touch page count + pin outcome (packed word)."""
         self._set(_OFF_PAGES, (pages << 2) | (pin & 3))
+
+    def set_io(self, retries: int, suppressed: int) -> None:
+        """Report the worker's transient-I/O counters (retried preads,
+        suppressed advisory errors). Written after every splinter and on
+        the error path, so the parent's fold-in sees the latest values
+        even across a crash."""
+        self._set(_OFF_IO_RETRIES, retries)
+        self._set(_OFF_IO_SUPPRESSED, suppressed)
 
     def set_error(self, message: str) -> None:
         raw = message.encode("utf-8", "replace")[: MSG_BYTES - 1]
@@ -277,6 +305,12 @@ class EventRing:
     def error_message(self) -> str:
         raw = bytes(self._buf[HDR_BYTES : HDR_BYTES + MSG_BYTES])
         return raw.split(b"\x00", 1)[0].decode("utf-8", "replace")
+
+    def io_report(self) -> "tuple[int, int]":
+        """(retried preads, suppressed advisory errors) as last reported by
+        the worker — folded into the session's RecoveryMetrics exactly once,
+        at supervisor shutdown."""
+        return self._get(_OFF_IO_RETRIES), self._get(_OFF_IO_SUPPRESSED)
 
     def pending(self) -> int:
         """Published-but-unconsumed record count (supervisor diagnostics)."""

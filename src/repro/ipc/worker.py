@@ -80,6 +80,11 @@ class WorkerSpec:
     pin_cpus: Optional[Tuple[int, ...]] = None   # sched_setaffinity target
     delay_model: Optional[object] = None  # picklable (reader, Splinter)->s
     fault: Optional[object] = None        # picklable (reader, index)->None
+    # Fault-injection hooks for the lower layers (picklable, core/faults.py):
+    # io_fault plugs into PosixFile.pread_into (short reads / transient
+    # OSErrors), ring_fault into EventRing.publish (torn slot stamps).
+    io_fault: Optional[object] = None
+    ring_fault: Optional[object] = None
     # Supervisor's pid: the orphan guard. 0 disables (inline test runs).
     # A spawned worker whose parent vanishes (SIGKILL/OOM of the consumer
     # process — daemon=True only covers clean interpreter exit) must not
@@ -109,6 +114,8 @@ def worker_main(spec: WorkerSpec) -> None:
         spec.ring_slots,
     )
     ring.set_pid(os.getpid())
+    ring.fault = spec.ring_fault
+    io = _IOCounters()
     try:
         pin = PIN_NONE
         if spec.pin_cpus:
@@ -131,6 +138,7 @@ def worker_main(spec: WorkerSpec) -> None:
             ring.set_state(ST_DONE)
             return
         f = PosixFile.open(spec.file_path)   # own fd — never inherited
+        f.fault = spec.io_fault
         try:
             for sp in spec.splinters:
                 if ring.stop_requested():    # graceful drain request
@@ -146,12 +154,16 @@ def worker_main(spec: WorkerSpec) -> None:
                 t0 = time.perf_counter()
                 lo = sp.offset - spec.base_offset
                 view = memoryview(arr)[lo: lo + sp.nbytes]
-                n = f.pread_into(sp.offset, view)
+                n = f.pread_into(sp.offset, view, stats=io)
                 dt = time.perf_counter() - t0
                 if n != sp.nbytes:
                     raise IOError(
                         f"short read: wanted {sp.nbytes} at {sp.offset}, "
                         f"got {n}")
+                # Refresh the header counters per splinter (not just at
+                # exit) so a later crash still leaves the latest tallies
+                # for the parent's fold-in.
+                ring.set_io(io.retries, io.suppressed)
                 published = ring.publish(RingEvent(
                     index=sp.index, reader=sp.reader, offset=sp.offset,
                     nbytes=sp.nbytes, arena_off=lo,
@@ -161,10 +173,29 @@ def worker_main(spec: WorkerSpec) -> None:
                     break
         finally:
             f.close()
+        ring.set_io(io.retries, io.suppressed)
         ring.set_state(ST_DONE)
     except BaseException as e:
+        ring.set_io(io.retries, io.suppressed)
         ring.set_error(f"{type(e).__name__}: {e}")
         raise SystemExit(1)
+
+
+class _IOCounters:
+    """Worker-local sink for the posix retry layer's stats protocol; the
+    tallies travel to the parent through the ring header (``set_io``)."""
+
+    __slots__ = ("retries", "suppressed")
+
+    def __init__(self) -> None:
+        self.retries = 0
+        self.suppressed = 0
+
+    def record_io_retry(self, err: Optional[int] = None) -> None:
+        self.retries += 1
+
+    def record_suppressed(self, err: Optional[int] = None) -> None:
+        self.suppressed += 1
 
 
 # -- picklable test/bench hooks ----------------------------------------------

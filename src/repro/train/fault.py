@@ -8,6 +8,17 @@ Slow-step detection (EMA + threshold) flags stragglers the way the reader
 layer's work stealing handles slow disks; at the training level the remedy
 on a real fleet is re-scheduling the step on spare capacity, which we model
 by re-running the step after logging.
+
+Reader-layer faults are first-class step failures: a
+:class:`~repro.ipc.worker.WorkerCrashed` escaping ``batches(step)`` (the
+``get_batch*`` path — a reader worker died terminally, e.g. its respawn
+budget exhausted) is caught like any device fault, counted in
+``stats.reader_failures``, and the step is restored + replayed rather than
+crashing the training loop. Because the failed *session* is unusable, the
+supervisor first invokes the optional ``input_recover`` hook (step ->
+None) so the caller can rebuild its input pipeline (close + reopen the
+CkIO pipeline / resize to the failed step) before the replay re-requests
+the same deterministic window.
 """
 from __future__ import annotations
 
@@ -15,6 +26,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.ipc.worker import WorkerCrashed
 from repro.train.checkpoint import AsyncCheckpointer, restore_tree
 
 
@@ -28,6 +40,9 @@ class SupervisorStats:
     failures: int = 0
     restores: int = 0
     straggler_steps: int = 0
+    # Step failures caused by the input layer (WorkerCrashed from
+    # get_batch*) — a subset of ``failures``.
+    reader_failures: int = 0
     step_times: List[float] = field(default_factory=list)
 
 
@@ -40,12 +55,18 @@ class StepSupervisor:
         ckpt_every: int = 50,
         max_retries: int = 3,
         straggler_factor: float = 3.0,
+        input_recover: Optional[Callable[[int], None]] = None,
     ):
         self.step_fn = step_fn
         self.ckpt = checkpointer
         self.ckpt_every = ckpt_every
         self.max_retries = max_retries
         self.straggler_factor = straggler_factor
+        # Called with the failing step before restore+replay when the
+        # failure came from the reader layer (WorkerCrashed): the dead
+        # session cannot serve the replay, so the caller rebuilds its
+        # input path here (e.g. pipeline.close() + reopen).
+        self.input_recover = input_recover
         self.stats = SupervisorStats()
         self._ema: Optional[float] = None
 
@@ -54,10 +75,13 @@ class StepSupervisor:
             self.ckpt.save(state, step)
 
     def _restore(self, like: Any) -> tuple:
+        # Drain pending saves (and their retention GC) BEFORE picking the
+        # latest path: globbing first can return a checkpoint the async GC
+        # deletes while we wait, turning the restore into FileNotFoundError.
+        self.ckpt.wait()
         path = self.ckpt.latest()
         if path is None:
             raise RuntimeError("failure before any checkpoint exists")
-        self.ckpt.wait()
         state, step = restore_tree(path, like)
         self.stats.restores += 1
         return state, step
@@ -110,6 +134,14 @@ class StepSupervisor:
                     pass
                 self.stats.failures += 1
                 retries += 1
+                if isinstance(e, WorkerCrashed):
+                    # The input layer died terminally (WorkerCrashed ⊂
+                    # RuntimeError, so it is already caught above — this
+                    # classifies it): count it and let the caller rebuild
+                    # the input path before the replay re-reads step data.
+                    self.stats.reader_failures += 1
+                    if self.input_recover is not None:
+                        self.input_recover(step)
                 if retries > self.max_retries:
                     raise RuntimeError(
                         f"step {step}: {retries - 1} consecutive retries exhausted"
