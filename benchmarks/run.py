@@ -108,6 +108,16 @@ def perf_recovery() -> None:
     m.run(quick=common.QUICK)
 
 
+def perf_fileset() -> None:
+    # Writes BENCH_fileset.json at the repo root (multi-shard FileSet drain
+    # vs the same stream as one file — bit-identical, zero-copy — plus the
+    # 8-device sharded staged-bytes ledger: constructor sharding stages 1x
+    # the window, balanced across devices; the legacy per-call fallback
+    # pays ~2x). Re-execs itself for the 8-device host mesh.
+    from benchmarks import perf_fileset as m
+    m.run(quick=common.QUICK)
+
+
 ALL = [
     fig1_naive_overdecomposition,
     fig2_disk_vs_network,
@@ -124,6 +134,7 @@ ALL = [
     perf_numa,
     perf_shm,
     perf_recovery,
+    perf_fileset,
 ]
 
 

@@ -30,6 +30,13 @@
 #                                            identically via respawn AND
 #                                            re-issue, overhead <= 1.5x a
 #                                            clean paced drain)
+#   benchmarks/perf_fileset.py --quick       multi-shard FileSet sessions
+#                                            (sharded drain bit-identical to
+#                                            the single-file stream, 8-device
+#                                            staged-bytes ledger: constructor
+#                                            sharding stages 1x the window
+#                                            balanced across devices, legacy
+#                                            per-call fallback ~2x)
 # Fault matrix: the seeded fault-injection tests replayed under several
 # CKIO_FAULT_SEED values (tier-1 already runs the full recovery suite once
 # under the default seed; the matrix re-derives the FaultPlan from each
@@ -61,6 +68,9 @@ python benchmarks/perf_shm.py --quick
 
 echo "== recovery benchmark (smoke, mid-drain SIGKILL) =="
 python benchmarks/perf_recovery.py --quick
+
+echo "== fileset benchmark (smoke, sharded sessions + staged-bytes ledger) =="
+python benchmarks/perf_fileset.py --quick
 
 echo "== fault matrix (seeded deterministic replay) =="
 for seed in 11 20260809 424242; do

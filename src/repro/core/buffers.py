@@ -231,6 +231,11 @@ class BufferReaderSet:
             self.metrics.piece_timing_every = opts.piece_timing_every
 
         self.locality = LocalityMetrics()
+        # FileSet sessions: the handle resolves offsets to shard ids
+        # (io.posix.ShardedFile.shard_of); None for single-file sessions.
+        # Splinters never span shards (hard stripe bounds), so attributing
+        # a whole pread to shard_of(offset) is exact.
+        self._shard_of = getattr(file, "shard_of", None)
         # Session storage: stripes are slices of one arena. Readers fill it;
         # clients get zero-copy memoryviews out of it. The allocation is a
         # subclass hook: the process backend substitutes a shared-memory
@@ -480,6 +485,9 @@ class BufferReaderSet:
                     f"short read: wanted {sp.nbytes} at {sp.offset}, got {n}"
                 )
             self.metrics.record_read(sp.reader, sp.nbytes, dt)
+            if self._shard_of is not None:
+                self.metrics.record_shard_read(self._shard_of(sp.offset),
+                                               sp.nbytes)
             if self.opts.topology is not None:
                 # Splinter-size histogram (per-reader sizing observable);
                 # skipped without a topology to keep the default read loop
@@ -856,6 +864,7 @@ class ProcessReaderSet(BufferReaderSet):
                 io_fault=self.opts.io_fault,
                 ring_fault=self.opts.ring_fault,
                 parent_pid=os.getpid(),
+                shards=getattr(self.file, "worker_segments", None),
             )
             self._worker_splinters.append(spec.splinters)
             self._worker_retired.append(False)
@@ -937,6 +946,9 @@ class ProcessReaderSet(BufferReaderSet):
         sp = Splinter(reader=ev.reader, index=ev.index,
                       offset=ev.offset, nbytes=ev.nbytes)
         self.metrics.record_read(ev.reader, ev.nbytes, ev.read_dt)
+        if self._shard_of is not None:
+            self.metrics.record_shard_read(self._shard_of(ev.offset),
+                                           ev.nbytes)
         if self.opts.topology is not None:
             self.locality.record_splinter(ev.reader, ev.nbytes)
         self._mark_done(sp, t_arrival=ev.t_arrival)
@@ -1092,6 +1104,18 @@ class ProcessReaderSet(BufferReaderSet):
             self._attached_evt.set()
 
     # -- recovery (supervisor thread) -----------------------------------------
+    def _shard_attribution(
+            self, splinters: List[Splinter]) -> Optional[Dict[int, int]]:
+        """FileSet sessions: re-routed bytes per shard id (splinters never
+        span shards). None for single-file sessions."""
+        if self._shard_of is None:
+            return None
+        by: Dict[int, int] = {}
+        for sp in splinters:
+            sh = self._shard_of(sp.offset)
+            by[sh] = by.get(sh, 0) + sp.nbytes
+        return by
+
     def _unfinished(self, w: int) -> List[Splinter]:
         """Splinters assigned to worker ``w`` that have not landed (its
         ring must be drained first so nothing already-published counts)."""
@@ -1179,6 +1203,7 @@ class ProcessReaderSet(BufferReaderSet):
             io_fault=self.opts.io_fault,
             ring_fault=self.opts.ring_fault,
             parent_pid=os.getpid(),
+            shards=getattr(self.file, "worker_segments", None),
         )
         ctx = mp.get_context("spawn")
         p = ctx.Process(target=worker_main, args=(spec,), daemon=True,
@@ -1198,7 +1223,8 @@ class ProcessReaderSet(BufferReaderSet):
         self._pending_attach[new_w] = (
             time.monotonic() + self.opts.worker_attach_timeout, t_detect)
         self.metrics.recovery.record_respawn(
-            len(unfinished), sum(sp.nbytes for sp in unfinished))
+            len(unfinished), sum(sp.nbytes for sp in unfinished),
+            by_shard=self._shard_attribution(unfinished))
         return True
 
     def _check_pending_attach(self) -> bool:
@@ -1241,7 +1267,8 @@ class ProcessReaderSet(BufferReaderSet):
         injection hooks (delay_model / worker_fault / io_fault) model the
         dead worker's environment and deliberately do NOT apply here."""
         self.metrics.recovery.record_reissue(
-            len(unfinished), sum(sp.nbytes for sp in unfinished))
+            len(unfinished), sum(sp.nbytes for sp in unfinished),
+            by_shard=self._shard_attribution(unfinished))
         th = threading.Thread(
             target=self._reissue_main, args=(list(unfinished), t_detect),
             daemon=True, name="ckio-reissue")
@@ -1265,6 +1292,9 @@ class ProcessReaderSet(BufferReaderSet):
                         f"short read re-issuing splinter {sp.index}: "
                         f"wanted {sp.nbytes} at {sp.offset}, got {n}")
                 self.metrics.record_read(sp.reader, sp.nbytes, dt)
+                if self._shard_of is not None:
+                    self.metrics.record_shard_read(
+                        self._shard_of(sp.offset), sp.nbytes)
                 if self.opts.topology is not None:
                     self.locality.record_splinter(sp.reader, sp.nbytes)
                 self._mark_done(sp)

@@ -18,7 +18,12 @@ from typing import Callable, Dict, List, Optional
 from repro.core.assembler import ReadAssembler
 from repro.core.buffers import BufferReaderSet, ProcessReaderSet
 from repro.core.futures import CkCallback
-from repro.core.metrics import LocalityMetrics, RecoveryMetrics, SessionMetrics
+from repro.core.metrics import (
+    LocalityMetrics,
+    RecoveryMetrics,
+    SessionMetrics,
+    ShardMetrics,
+)
 from repro.core.placement import place_readers
 from repro.core.scheduler import TaskScheduler
 from repro.core.session import FileHandle, FileOptions, Session
@@ -73,6 +78,11 @@ class Director:
         # splinters, I/O retries, degraded sessions) — same merge-on-close
         # pattern as ``locality``.
         self.recovery = RecoveryMetrics()
+        # Director-lifetime FileSet aggregate: per-shard physical read
+        # bytes, fed through the same observer path (the pipeline's
+        # sharded-staging side also writes its own ShardMetrics).
+        self.shards = ShardMetrics()
+        self._observers.append(self.shards.merge_session)
 
     def add_observer(self, observe: Callable[[SessionMetrics], None]) -> None:
         """Register a session-close observer on the shared observation path
@@ -94,6 +104,27 @@ class Director:
 
         # Opening is itself split-phase: runs as a task on PE 0.
         self.sched.enqueue(0, do_open, label="ckio-open")
+
+    def open_fileset(
+        self, fileset, opts: FileOptions, opened: CkCallback
+    ) -> None:
+        """Open a multi-shard manifest (``data/fileset.py FileSet``) as one
+        logical file: the handle's ``posix`` is a ``ShardedFile`` over the
+        manifest's global data byte space, so sessions/reads/streams work
+        unchanged. The manifest is duck-typed (``sharded_file()`` +
+        ``describe()``) — the core layer never imports the data layer."""
+
+        def do_open() -> None:
+            sharded = fileset.sharded_file()
+            with self._lock:
+                fid = next(self._file_ids)
+                handle = FileHandle(
+                    id=fid, path=sharded.path, posix=sharded, opts=opts,
+                    fileset=fileset)
+                self.files[fid] = handle
+            opened.send(self.sched, handle)
+
+        self.sched.enqueue(0, do_open, label="ckio-open-fileset")
 
     def close_file(self, handle: FileHandle, closed: CkCallback) -> None:
         def do_close() -> None:
@@ -118,6 +149,13 @@ class Director:
         num_readers = opts.num_readers or suggest_num_readers(
             nbytes, self.sched.num_pes, self.sched.num_nodes
         )
+        # FileSet sessions: shard starts inside the window are HARD stripe
+        # bounds (no stripe — so no splinter, so no single pread — may span
+        # one). Segmenting needs >= one reader per shard segment; bump the
+        # count BEFORE adaptive sizing so per-reader splinter sizes line up.
+        bounds_in = getattr(file.posix, "bounds_in", None)
+        hard_bounds = tuple(bounds_in(offset, nbytes)) if bounds_in else ()
+        num_readers = max(num_readers, len(hard_bounds) + 1)
 
         def do_start() -> None:
             if sequenced:
@@ -142,6 +180,7 @@ class Director:
                     offset, nbytes, num_readers,
                     splinter_bytes=splinter_bytes,
                     reader_splinter_bytes=reader_sizes,
+                    hard_bounds=hard_bounds or None,
                 )
                 reader_pes = place_readers(
                     opts.placement, plan.num_readers, self.sched,

@@ -68,6 +68,10 @@ class RecoveryMetrics:
     watchdog_kills: int = 0
     recovery_latency_s: float = 0.0
     degraded_mode: bool = False
+    # FileSet sessions: re-issued bytes attributed to the shard whose file
+    # they live in (splinters never span shards, so attribution is exact) —
+    # proving a recovery re-read the RIGHT shard, not just the right amount.
+    reissued_bytes_by_shard: Dict[int, int] = field(default_factory=dict)
 
     def record_io_retry(self, err: Optional[int] = None) -> None:
         with self.lock:
@@ -79,17 +83,28 @@ class RecoveryMetrics:
         with self.lock:
             self.suppressed_errors += 1
 
-    def record_respawn(self, nsplinters: int, nbytes: int) -> None:
+    def record_respawn(self, nsplinters: int, nbytes: int,
+                       by_shard: Optional[Dict[int, int]] = None) -> None:
         with self.lock:
             self.respawns += 1
             self.reissued_splinters += nsplinters
             self.reissued_bytes += nbytes
+            self._fold_shards(by_shard)
 
-    def record_reissue(self, nsplinters: int, nbytes: int) -> None:
+    def record_reissue(self, nsplinters: int, nbytes: int,
+                       by_shard: Optional[Dict[int, int]] = None) -> None:
         with self.lock:
             self.reissues += 1
             self.reissued_splinters += nsplinters
             self.reissued_bytes += nbytes
+            self._fold_shards(by_shard)
+
+    def _fold_shards(self, by_shard: Optional[Dict[int, int]]) -> None:
+        """Caller holds ``self.lock``."""
+        if by_shard:
+            for sh, nb in by_shard.items():
+                self.reissued_bytes_by_shard[sh] = (
+                    self.reissued_bytes_by_shard.get(sh, 0) + nb)
 
     def record_watchdog_kill(self) -> None:
         with self.lock:
@@ -123,6 +138,7 @@ class RecoveryMetrics:
                 other.worker_io_retries, other.worker_suppressed,
                 other.watchdog_kills, other.recovery_latency_s,
                 other.degraded_mode,
+                dict(other.reissued_bytes_by_shard),
             )
         with self.lock:
             self.respawns += snap[0]
@@ -138,6 +154,7 @@ class RecoveryMetrics:
             self.watchdog_kills += snap[9]
             self.recovery_latency_s += snap[10]
             self.degraded_mode = self.degraded_mode or snap[11]
+            self._fold_shards(snap[12])
 
     def summary(self) -> Dict[str, float]:
         with self.lock:
@@ -154,6 +171,7 @@ class RecoveryMetrics:
                 "watchdog_kills": float(self.watchdog_kills),
                 "recovery_latency_s": self.recovery_latency_s,
                 "degraded_mode": float(self.degraded_mode),
+                "shards_reissued": float(len(self.reissued_bytes_by_shard)),
             }
 
 
@@ -197,6 +215,10 @@ class SessionMetrics:
     # retries, …); travels the same Director observer path as the rest of
     # the session counters. Has its own lock.
     recovery: RecoveryMetrics = field(default_factory=RecoveryMetrics)
+    # FileSet sessions: physically-read bytes per shard id (splinters never
+    # span shards, so every pread lands wholly in one shard file). Empty
+    # for single-file sessions.
+    shard_bytes: Dict[int, int] = field(default_factory=dict)
     _piece_seq: int = 0               # sampling counter (racy by design)
 
     def session_started(self, nbytes: int, num_readers: int) -> None:
@@ -220,6 +242,11 @@ class SessionMetrics:
             self.reads_per_reader[reader] = (
                 self.reads_per_reader.get(reader, 0) + 1
             )
+
+    def record_shard_read(self, shard: int, nbytes: int) -> None:
+        """One physical read attributed to FileSet shard ``shard``."""
+        with self.lock:
+            self.shard_bytes[shard] = self.shard_bytes.get(shard, 0) + nbytes
 
     def record_steal(self, victim: int) -> None:
         """One splinter stolen from reader ``victim``'s pending queue —
@@ -304,6 +331,7 @@ class SessionMetrics:
             "timed_pieces": float(self.timed_pieces),
             "requests": float(self.requests),
             "imbalance": self.imbalance(),
+            "shards_read": float(len(self.shard_bytes)),
         }
 
 
@@ -531,6 +559,80 @@ class LocalityMetrics:
                 "pinned_threads": float(self.pinned_threads),
                 "pin_failures": float(self.pin_failures),
                 "readers_observed": float(len(self.splinter_hist)),
+            }
+
+
+@dataclass
+class ShardMetrics:
+    """FileSet / sharded-staging accounting.
+
+    Two feeds, one aggregate:
+
+    * **read side** — ``merge_session`` rides the Director observer path
+      (``Director.add_observer``): each closing session's
+      ``SessionMetrics.shard_bytes`` (physical bytes per FileSet shard)
+      folds in here, so drivers read one object after many sessions.
+    * **stage side** — the pipeline's sharded-streaming path records every
+      ``device_put`` it issues (``record_stage``) plus, per step, the whole
+      window size vs the bytes this host actually staged
+      (``record_window``). ``addressable_bytes < window_bytes`` with
+      ``cross_host_placements > 0`` is the multi-host proof: chunks bound
+      for another host's devices were *placed* (counted) but never staged
+      here. On a single-host mesh the two are equal and cross-host stays 0.
+    """
+
+    lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    sessions: int = 0
+    shard_bytes: Dict[int, int] = field(default_factory=dict)
+    device_put_calls: int = 0
+    device_bytes: Dict[str, int] = field(default_factory=dict)
+    window_bytes: int = 0             # full (B, S+1) windows, summed
+    addressable_bytes: int = 0        # what THIS host staged, summed
+    cross_host_placements: int = 0
+    cross_host_bytes: int = 0
+
+    def merge_session(self, sm: "SessionMetrics") -> None:
+        """Director observer: fold one finished session's per-shard reads."""
+        with sm.lock:
+            snap = dict(sm.shard_bytes)
+        with self.lock:
+            self.sessions += 1
+            for sh, nb in snap.items():
+                self.shard_bytes[sh] = self.shard_bytes.get(sh, 0) + nb
+
+    def record_stage(self, device_key: str, nbytes: int) -> None:
+        """One ``device_put`` of ``nbytes`` to an addressable device."""
+        with self.lock:
+            self.device_put_calls += 1
+            self.device_bytes[device_key] = (
+                self.device_bytes.get(device_key, 0) + nbytes)
+
+    def record_window(self, window_bytes: int, addressable_bytes: int) -> None:
+        with self.lock:
+            self.window_bytes += window_bytes
+            self.addressable_bytes += addressable_bytes
+
+    def record_cross_host(self, nbytes: int) -> None:
+        """A chunk slice bound for a non-addressable (other-host) device:
+        placed, counted, NOT staged here."""
+        with self.lock:
+            self.cross_host_placements += 1
+            self.cross_host_bytes += nbytes
+
+    def summary(self) -> Dict[str, float]:
+        with self.lock:
+            max_dev = max(self.device_bytes.values(), default=0)
+            return {
+                "sessions": float(self.sessions),
+                "shards_read": float(len(self.shard_bytes)),
+                "shard_read_bytes": float(sum(self.shard_bytes.values())),
+                "device_put_calls": float(self.device_put_calls),
+                "devices_staged": float(len(self.device_bytes)),
+                "max_device_bytes": float(max_dev),
+                "window_bytes": float(self.window_bytes),
+                "addressable_bytes": float(self.addressable_bytes),
+                "cross_host_placements": float(self.cross_host_placements),
+                "cross_host_bytes": float(self.cross_host_bytes),
             }
 
 

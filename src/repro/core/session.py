@@ -135,12 +135,17 @@ class FileOptions:
 
 @dataclass
 class FileHandle:
-    """Returned by ``CkIO.open`` (paper: ``Ck::IO::File``)."""
+    """Returned by ``CkIO.open`` / ``CkIO.open_fileset`` (paper:
+    ``Ck::IO::File``). ``posix`` is a ``PosixFile`` for single-file opens
+    and the byte-space-compatible ``io.posix.ShardedFile`` for FileSet
+    opens (``fileset`` then carries the manifest; offsets are global data
+    bytes — header pages excluded)."""
 
     id: int
     path: str
-    posix: PosixFile
+    posix: PosixFile                    # or io.posix.ShardedFile (duck-typed)
     opts: FileOptions
+    fileset: Optional[object] = None    # data.fileset.FileSet when sharded
 
     @property
     def size(self) -> int:

@@ -14,7 +14,8 @@ from repro.data.packing import (
     token_gather_from_pieces,
     window_rows,
 )
-from repro.data.pipeline import CkIOPipeline
+from repro.data.fileset import FileSet, ShardInfo, write_token_shards
+from repro.data.pipeline import CkIOPipeline, device_token_spans
 from repro.data.synthetic import (
     make_embedding_file,
     make_opaque_file,
@@ -33,7 +34,11 @@ __all__ = [
     "row_gather_index",
     "token_gather_from_pieces",
     "window_rows",
+    "FileSet",
+    "ShardInfo",
+    "write_token_shards",
     "CkIOPipeline",
+    "device_token_spans",
     "make_embedding_file",
     "make_opaque_file",
     "make_token_file",

@@ -68,12 +68,71 @@ depends on the stream: splinters whose events were dropped (a delivery
 racing ``resize()`` — dropped and counted, never rerouted to a reused
 consumer slot) are staged from the authoritative event log at finalize.
 Batches are bit-identical to the ``streaming=False`` whole-window path.
-A per-call ``sharding`` forces that call onto the whole-window path —
-streamed chunks are placed before the call-site sharding is known, so they
-cannot satisfy it. The fallback is explicit: the first sharded call on a
-streaming pipeline emits a ``RuntimeWarning`` (once per pipeline) because
-it forfeits the read/stage overlap on every sharded step; a run that
-passes a sharding each step should construct with ``streaming=False``.
+
+Sharded staging (constructor ``sharding=``)
+-------------------------------------------
+A **constructor** ``sharding=`` (any ``jax.sharding.Sharding``) composes
+with both device paths instead of fighting them: the sharding's device
+blocks over the ``(global_batch, seq_len+1)`` window grid are resolved
+ONCE into contiguous flat-token spans (``device_token_spans`` — batch-dim
+shardings only; a sharding that splits the sequence dimension raises at
+construction). With ``streaming=True`` every arriving splinter is then
+routed to its destination device(s) at stage time by pure interval
+intersection: each addressable sub-slice is ``device_put`` straight from
+the borrowed arena view onto its device (``host_permute_bytes`` stays 0),
+and spans owned by another host's devices are *counted*
+(``ShardMetrics.cross_host``) and skipped — each host stages exactly its
+addressable slice of the window, never the whole window.
+``get_batch_device`` then proves coverage from the event log, pads the
+remainder tail on-device, binds the per-device row blocks into one global
+array with ``jax.make_array_from_single_device_arrays`` (metadata only —
+no restage) and applies the label shift under ``jit``. Batches are
+bit-identical to the unsharded paths. ``streaming=False`` +
+constructor sharding runs the same per-device slicing over the resident
+whole-window view (one ``device_put`` per addressable device) through the
+same assembly code. A **per-call** ``sharding`` without a constructor
+sharding keeps the legacy behaviour: it forces that call onto the
+whole-window path — streamed chunks are placed before the call-site
+sharding is known, so they cannot satisfy it — and the fallback is
+explicit: the first sharded call on a streaming pipeline emits a
+``RuntimeWarning`` (once per pipeline) because it forfeits the read/stage
+overlap on every sharded step; a run that passes a sharding each step
+should pass it at construction time (or construct ``streaming=False``).
+``ShardMetrics`` (``pipe.ck.director.shards``) carries both sides of the
+ledger: the *read* side (per-shard physical bytes, fed through the
+Director's session-close observer) and the *stage* side
+(``record_stage``/``record_window``/``record_cross_host`` written here) —
+``addressable_bytes < window_bytes`` with ``cross_host_placements > 0``
+is the multi-host proof that no host staged bytes it cannot address.
+
+Multi-file corpora (``data/fileset.py`` ``FileSet``)
+----------------------------------------------------
+Passing a ``FileSet`` manifest as ``path`` opens the whole shard list as
+ONE logical byte space (``CkIO.open_fileset``): global row/byte
+addressing concatenates the shards' data regions (header pages excluded),
+and interior shard starts become hard stripe bounds in every session plan
+— no stripe, splinter, or single ``preadv`` ever spans two files. Every
+delivery contract in this docstring holds unchanged over a FileSet:
+
+  * **view lifetimes**: a borrowed view or streamed chunk view aliases
+    bytes read from exactly one shard (splinters never cross shards) but
+    lives in the one session arena, so the lifetime rules are untouched —
+    valid until the step retires at the next ``get_batch*``/``close``,
+    then ``ValueError`` on access;
+  * **process backend**: each ``WorkerSpec`` ships the shard segment
+    table and the worker rebuilds its OWN ``ShardedFile`` — one fresh fd
+    per shard path, nothing inherited (the same fd-hygiene contract as
+    single files);
+  * **recovery**: if the worker owning one shard's stripes dies mid-drain
+    under ``recovery="respawn"``/``"reissue"``, the standard machinery
+    re-reads exactly the unfinished splinters — all within that shard —
+    and ``RecoveryMetrics.reissued_bytes_by_shard`` attributes the
+    re-read bytes to it (exact, not sampled, because splinters never span
+    shards). Completion stays bit-identical; terminal failures behave
+    exactly as the single-file contract above;
+  * **sharded streaming composes**: per-shard physical reads land in the
+    same global window token space, so chunk→device routing and the
+    staged-bytes ledger are file-count agnostic.
 Note on ``FileOptions(adaptive_splinters=True)``: each splinter-size
 change changes the chunk count/shape signature and retraces the fused
 consume executable once; the sizer EMA-smooths and 256 KiB-quantizes its
@@ -206,6 +265,41 @@ from repro.data.packing import batch_from_tokens, window_rows
 from repro.data.tokenfile import read_meta
 
 
+def device_token_spans(indices_map, global_batch: int, width: int) -> Dict:
+    """Resolve a sharding's ``devices_indices_map`` over the ``(batch,
+    width)`` window grid into contiguous flat-token spans.
+
+    Returns ``{device: (tok_start, tok_end)}`` in the window's flat token
+    space. Raises ``ValueError`` unless every device block is a contiguous
+    row range × the FULL width — the only layouts whose blocks are
+    contiguous token spans, which is what lets an arriving chunk be routed
+    to its destination device(s) by pure interval intersection (no host
+    permutation). Pure function of the plain ``{device: (row_slice,
+    col_slice)}`` map — unit-testable with fake multi-device maps, no jax
+    required.
+    """
+    spans: Dict = {}
+    for dev, idx in indices_map.items():
+        if len(idx) != 2:
+            raise ValueError(
+                f"sharded pipeline expects a 2-d (batch, seq+1) sharding; "
+                f"device {dev} has a {len(idx)}-d index")
+        rows, cols = idx
+        r0, r1, rstep = rows.indices(global_batch)
+        c0, c1, cstep = cols.indices(width)
+        if rstep != 1 or cstep != 1:
+            raise ValueError(
+                f"sharded pipeline needs unit-stride device blocks; "
+                f"device {dev} has strides ({rstep}, {cstep})")
+        if (c0, c1) != (0, width):
+            raise ValueError(
+                f"sharding splits the sequence dimension (device {dev} "
+                f"covers columns [{c0},{c1}) of {width}); only batch-dim "
+                f"shardings map to contiguous token spans")
+        spans[dev] = (r0 * width, max(r0, r1) * width)
+    return spans
+
+
 @dataclass
 class _StreamState:
     """Per-step streamed-staging state (``streaming=True`` device path)."""
@@ -220,6 +314,12 @@ class _StreamState:
     t_last_stage: float = 0.0
     stagers: int = 0                       # _stage_group calls in flight
     retired: bool = False
+    # Constructor-sharding mode: chunks are routed per device span at stage
+    # time; abs_off anchors event offsets in the window's token space and
+    # dev_pieces collects {device: [(tok_start, device_chunk), ...]}.
+    sharded: bool = False
+    abs_off: int = 0
+    dev_pieces: Dict = field(default_factory=dict)
 
 
 @dataclass
@@ -250,7 +350,7 @@ class CkIOPipeline:
 
     def __init__(
         self,
-        path: str,
+        path,
         global_batch: int,
         seq_len: int,
         *,
@@ -264,18 +364,27 @@ class CkIOPipeline:
         drop_remainder: bool = True,
         zero_copy: bool = True,
         streaming: bool = False,
+        sharding=None,
         stage_chunk_bytes: int = 0,
         max_inflight_stage_bytes: int = 32 << 20,
         pad_id: int = 0,
     ):
-        self.meta = read_meta(path)
+        # ``path``: a filesystem path (single token file) or a
+        # ``data.fileset.FileSet`` manifest (duck-typed — it carries the
+        # same meta surface with ``data_offset == 0``, so every offset in
+        # this pipeline is a global data-space byte either way).
+        is_fileset = hasattr(path, "sharded_file")
+        self.meta = path if is_fileset else read_meta(path)
         if len(self.meta.shape) != 1:
             raise ValueError("LM pipeline expects a flat token file")
         self.global_batch = global_batch
         self.seq_len = seq_len
         self.ck = ckio or CkIO(num_pes=num_pes)
         self.file_opts = file_opts or FileOptions()
-        self.file = self.ck.open_sync(path, self.file_opts)
+        if is_fileset:
+            self.file = self.ck.open_fileset_sync(path, self.file_opts)
+        else:
+            self.file = self.ck.open_sync(path, self.file_opts)
         self.prefetch_depth = max(1, prefetch_depth)
         self.drop_remainder = drop_remainder
         self.pad_id = pad_id
@@ -320,6 +429,19 @@ class CkIOPipeline:
                 f"({self.file_opts.splinter_bytes}) to be a multiple of the "
                 f"token itemsize ({self.meta.itemsize})")
         self.streaming = streaming
+        # Constructor sharding: resolve the device blocks over the (B, S+1)
+        # window grid into contiguous token spans ONCE (ValueError unless
+        # the sharding is batch-dim only). Per-chunk routing at stage time
+        # is then pure interval intersection against these spans.
+        self.sharding = sharding
+        self._dev_spans: Optional[Dict] = None
+        self._addr_devices = frozenset()
+        self._shift_fn = None
+        if sharding is not None:
+            self._dev_spans = device_token_spans(
+                sharding.devices_indices_map((global_batch, seq_len + 1)),
+                global_batch, seq_len + 1)
+            self._addr_devices = frozenset(sharding.addressable_devices)
         # 0 (default) ships every splinter the moment its event lands —
         # maximum overlap; a larger threshold batches pending arrivals into
         # fewer staging tasks (the tail is always shipped at finalize).
@@ -480,7 +602,8 @@ class CkIOPipeline:
     # -- streamed staging (the event-driven device path) ----------------------
     def _subscribe_stream(self, buf: _StepBuffer, session: Session) -> None:
         """Attach the per-splinter staging loop to ``session``'s stream."""
-        st = _StreamState(session=session)
+        st = _StreamState(session=session, sharded=self.sharding is not None,
+                          abs_off=buf.abs_off)
         buf.stream = st
 
         def route(ev: SplinterEvent) -> Optional[Client]:
@@ -541,21 +664,12 @@ class CkIOPipeline:
 
         if not group:
             return
+        if st.sharded:
+            return self._stage_group_sharded(st, group)
         sess = st.session
         assert sess is not None
         for ev in group:
-            # Bounded in-flight budget: make room by awaiting the oldest
-            # outstanding transfer(s) — from whichever step stream issued
-            # them — before issuing another one.
-            while True:
-                with self._lock:
-                    if (self.stream.inflight_bytes + ev.nbytes
-                            <= self.max_inflight_stage_bytes
-                            or not self._stage_outstanding):
-                        break
-                    _, old_chunk, old_n = self._stage_outstanding.popleft()
-                old_chunk.block_until_ready()
-                self.stream.stage_inflight(-old_n)
+            self._evict_for(ev.nbytes)
             view = sess.readers.borrow_view(ev.offset, ev.nbytes)
             tokens = np.frombuffer(view, dtype=self.meta.dtype)
             if tokens.dtype == np.uint32:
@@ -581,6 +695,82 @@ class CkIOPipeline:
                 self._stage_outstanding.append((st, chunk, ev.nbytes))
             self.stream.record_chunk(
                 ev.nbytes, 1, t1 - t0, [t1 - ev.t_arrival])
+
+    def _evict_for(self, nbytes: int) -> None:
+        """Bounded in-flight budget: make room for an ``nbytes`` transfer by
+        awaiting the oldest outstanding transfer(s) — from whichever step
+        stream issued them — before the caller issues another one."""
+        while True:
+            with self._lock:
+                if (self.stream.inflight_bytes + nbytes
+                        <= self.max_inflight_stage_bytes
+                        or not self._stage_outstanding):
+                    return
+                _, old_chunk, old_n = self._stage_outstanding.popleft()
+            old_chunk.block_until_ready()
+            self.stream.stage_inflight(-old_n)
+
+    def _stage_group_sharded(
+        self, st: _StreamState, group: List[SplinterEvent]
+    ) -> None:
+        """Sharded streamed staging: route each arrived splinter's tokens to
+        their destination device(s) by interval intersection against the
+        resolved spans and ``device_put`` each *addressable* sub-slice onto
+        its device. The sub-slices are numpy views of the session arena
+        (zero host copies, ``host_permute_bytes`` stays 0); spans owned by
+        another host's devices are counted (``ShardMetrics.cross_host``)
+        and skipped — this host never stages bytes it cannot address."""
+        import jax
+
+        sess = st.session
+        assert sess is not None
+        itemsize = self.meta.itemsize
+        shards = self.ck.director.shards
+        for ev in group:
+            view = sess.readers.borrow_view(ev.offset, ev.nbytes)
+            tokens = np.frombuffer(view, dtype=self.meta.dtype)
+            if tokens.dtype == np.uint32:
+                tokens = tokens.view(np.int32)
+            tok0 = (ev.offset - st.abs_off) // itemsize
+            ntok = ev.nbytes // itemsize
+            t0 = time.perf_counter()
+            staged_bytes = 0
+            npieces = 0
+            for dev, (s0, s1) in self._dev_spans.items():
+                lo, hi = max(tok0, s0), min(tok0 + ntok, s1)
+                if lo >= hi:
+                    continue
+                nb = (hi - lo) * itemsize
+                if dev not in self._addr_devices:
+                    shards.record_cross_host(nb)
+                    continue
+                self._evict_for(nb)
+                sub = tokens[lo - tok0: hi - tok0]
+                self.stream.stage_inflight(nb)
+                try:
+                    chunk = jax.device_put(sub, dev)
+                except BaseException:
+                    self.stream.stage_inflight(-nb)
+                    raise
+                with self._lock:
+                    st.dev_pieces.setdefault(dev, []).append((lo, chunk))
+                    self._stage_outstanding.append((st, chunk, nb))
+                shards.record_stage(str(dev), nb)
+                staged_bytes += nb
+                npieces += 1
+            t1 = time.perf_counter()
+            if st.t_first_stage == 0.0:
+                st.t_first_stage = t0
+            st.t_last_stage = t1
+            with self._lock:
+                # The event (and its pinning host refs) is recorded even if
+                # every intersecting span was remote: the coverage proof at
+                # finalize runs over the event log, not the staged pieces.
+                st.chunk_hosts.append((tokens, view))
+                st.events.append(ev)
+            if npieces:
+                self.stream.record_chunk(
+                    staged_bytes, npieces, t1 - t0, [t1 - ev.t_arrival])
 
     def _finalize_stream(self, buf: _StepBuffer):
         """All reads are resident (``buf.ready``): stop the stream, stage the
@@ -637,6 +827,8 @@ class CkIOPipeline:
             while st.stagers:          # drain in-flight _stage_group calls
                 self._lock.wait()
             chunks, st.chunks = list(st.chunks), []
+            chunks.extend(c for ps in st.dev_pieces.values() for _, c in ps)
+            st.dev_pieces = {}
             st.chunk_hosts = []
             own = [e for e in self._stage_outstanding if e[0] is st]
             self._stage_outstanding = deque(
@@ -759,6 +951,19 @@ class CkIOPipeline:
         from repro.kernels import ops
 
         buf = self._wait_step(step, timeout)
+        if self.sharding is not None:
+            # Constructor sharding owns the step: per-call shardings must
+            # agree (the spans were resolved — and streamed chunks placed —
+            # against the constructor's). use_pallas is moot here: the
+            # sharded assembly is concat+reshape+shift, no gather kernel.
+            if sharding is not None and sharding != self.sharding:
+                raise ValueError(
+                    "get_batch_device(sharding=...) differs from the "
+                    "pipeline's constructor sharding; streamed chunks are "
+                    "already placed against the constructor's spans")
+            if buf.stream is not None:
+                return self._get_batch_device_streamed_sharded(buf)
+            return self._get_batch_device_window_sharded(buf)
         if buf.stream is not None and sharding is None:
             return self._get_batch_device_streamed(buf, use_pallas=use_pallas)
         if buf.stream is not None and not self._warned_stream_sharding:
@@ -873,6 +1078,165 @@ class CkIOPipeline:
             now - self._t_last_step,
         )
         self._t_last_step = now
+        return inputs, labels
+
+    # -- sharded device path (constructor sharding=) ---------------------------
+    def _np_token_dtype(self):
+        """Host-side token dtype after the zero-copy uint32→int32 view."""
+        dt = np.dtype(self.meta.dtype)
+        return np.dtype(np.int32) if dt == np.uint32 else dt
+
+    def _shift(self, window):
+        """Jitted label shift over the assembled sharded window: the
+        ``(w[:, :-1], w[:, 1:])`` split of ``batch_from_tokens``, computed
+        on device. Column slicing never crosses a batch-dim shard, so the
+        outputs keep the window's sharding without any communication."""
+        import jax
+
+        if self._shift_fn is None:
+            self._shift_fn = jax.jit(lambda w: (w[:, :-1], w[:, 1:]))
+        return self._shift_fn(window)
+
+    def _assemble_sharded_window(self, dev_pieces: Dict, valid_tokens: int):
+        """Bind per-device token pieces (already resident on their
+        destination devices) into the global sharded ``(B, S+1)`` window:
+        per addressable device — sort by token offset, prove its span is
+        exactly covered, pad the remainder tail on-device, reshape to the
+        device's row block — then
+        ``jax.make_array_from_single_device_arrays`` (metadata only, no
+        further transfer)."""
+        import jax
+        import jax.numpy as jnp
+
+        width = self.seq_len + 1
+        np_dtype = self._np_token_dtype()
+        # Deterministic block order (addressable_devices is a set).
+        devs = sorted(self._addr_devices, key=lambda d: d.id)
+        blocks = []
+        for dev in devs:
+            s0, s1 = self._dev_spans[dev]
+            pieces = sorted(dev_pieces.get(dev, ()), key=lambda p: p[0])
+            pos = s0
+            for t0, c in pieces:
+                if t0 != pos:
+                    raise RuntimeError(
+                        f"sharded pieces corrupt on {dev}: expected token "
+                        f"{pos}, got {t0}")
+                pos += c.size
+            expected = max(0, min(s1, valid_tokens) - s0)
+            if pos - s0 != expected:
+                raise RuntimeError(
+                    f"sharded pieces do not cover {dev}'s span: "
+                    f"{pos - s0} of {expected} tokens")
+            parts = [c for _, c in pieces]
+            pad = (s1 - s0) - expected
+            with jax.default_device(dev):
+                if pad:
+                    parts.append(jnp.full((pad,), self.pad_id,
+                                          dtype=np_dtype))
+                if not parts:          # empty span (more devices than rows)
+                    parts = [jnp.zeros((0,), dtype=np_dtype)]
+                block = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+                blocks.append(block.reshape((s1 - s0) // width, width))
+        return jax.make_array_from_single_device_arrays(
+            (self.global_batch, width), self.sharding, blocks)
+
+    def _addressable_window_bytes(self, valid_tokens: int) -> int:
+        """Bytes of this step's *valid* window owned by this host's
+        devices (the staged-bytes ledger's addressable side)."""
+        itemsize = self.meta.itemsize
+        return sum(
+            max(0, min(s1, valid_tokens) - min(s0, valid_tokens)) * itemsize
+            for dev, (s0, s1) in self._dev_spans.items()
+            if dev in self._addr_devices)
+
+    def _get_batch_device_streamed_sharded(self, buf: _StepBuffer):
+        """Sharded streamed tail: finalize the chunk stream (the per-device
+        pieces were ``device_put`` as their splinters arrived), prove
+        window coverage from the event log, assemble the global window and
+        shift — no whole-window restage, no ``RuntimeWarning``."""
+        self._close_retired()          # release the previous step's refs
+        _, pieces, st = self._finalize_stream(buf)
+        sess = st.session
+        valid_tokens = buf.nbytes // self.meta.itemsize
+        # Exactly-once coverage of the window, from the authoritative event
+        # log (staged pieces can be a strict subset on multi-host runs).
+        pos = buf.abs_off
+        for off, nb in sorted(pieces):
+            if off != pos:
+                raise RuntimeError(
+                    f"streamed pieces corrupt: expected offset {pos}, "
+                    f"got {off}")
+            pos += nb
+        if pos != buf.abs_off + buf.nbytes:
+            raise RuntimeError("streamed pieces do not cover the window")
+        window = self._assemble_sharded_window(st.dev_pieces, valid_tokens)
+        inputs, labels = self._shift(window)
+        self.ck.director.shards.record_window(
+            buf.nbytes, self._addressable_window_bytes(valid_tokens))
+        with self._lock:
+            self._retired.append(sess)
+            self._staged.append(_StagedStep(
+                staged=(inputs, labels),
+                host_tokens=st.chunk_hosts,
+                host_view=None,
+            ))
+            npieces = sum(len(v) for v in st.dev_pieces.values())
+            st.dev_pieces = {}
+            st.chunk_hosts = []
+        buf.stream = None
+        self.ingest.record_device_step(
+            buf.nbytes, transfers=npieces, host_bytes=0)
+        now = time.perf_counter()
+        self.stream.record_step(
+            (sess.metrics.t_start, sess.metrics.t_last_read),
+            (st.t_first_stage, st.t_last_stage),
+            now - self._t_last_step,
+        )
+        self._t_last_step = now
+        return inputs, labels
+
+    def _get_batch_device_window_sharded(self, buf: _StepBuffer):
+        """Whole-window variant of the sharded path (``streaming=False``):
+        slice the resident window's host tokens per addressable device span
+        (numpy views — no host copy in zero-copy mode), one ``device_put``
+        per addressable device, then the same assembly as the streamed
+        path. Each host stages only its addressable slice."""
+        import jax
+
+        tokens, view = self._window_tokens(buf)
+        itemsize = self.meta.itemsize
+        valid_tokens = buf.nbytes // itemsize
+        shards = self.ck.director.shards
+        dev_pieces: Dict = {}
+        npieces = 0
+        for dev, (s0, s1) in self._dev_spans.items():
+            lo, hi = min(s0, valid_tokens), min(s1, valid_tokens)
+            if dev not in self._addr_devices:
+                shards.record_cross_host((hi - lo) * itemsize)
+                continue
+            if hi > lo:
+                chunk = jax.device_put(tokens[lo:hi], dev)
+                dev_pieces[dev] = [(lo, chunk)]
+                shards.record_stage(str(dev), (hi - lo) * itemsize)
+                npieces += 1
+        shards.record_window(
+            buf.nbytes, self._addressable_window_bytes(valid_tokens))
+        window = self._assemble_sharded_window(dev_pieces, valid_tokens)
+        inputs, labels = self._shift(window)
+        if self.zero_copy:
+            with self._lock:
+                # borrow_view in _window_tokens appended the session; the
+                # staged refs pin arena + transfers until the next call.
+                self._staged.append(_StagedStep(
+                    staged=(inputs, labels),
+                    host_tokens=tokens,
+                    host_view=view,
+                ))
+        self.ingest.record_device_step(
+            buf.nbytes, transfers=npieces,
+            host_bytes=0 if self.zero_copy else buf.nbytes)
+        self._t_last_step = time.perf_counter()
         return inputs, labels
 
     def idle(self, seconds: float) -> int:

@@ -83,12 +83,34 @@ def write_token_file(path: str, array: np.ndarray) -> TokenFileMeta:
 
 
 def read_meta(path: str) -> TokenFileMeta:
+    """Parse the 4096-byte header page; every corruption mode raises a
+    descriptive ``ValueError`` naming the path (a torn header must not
+    surface as a raw ``json``/``KeyError`` deep inside a session open)."""
     with open(path, "rb") as f:
-        blob = f.read(HEADER_BYTES).split(b"\x00", 1)[0]
-    meta = json.loads(blob)
-    if meta.get("magic") != MAGIC:
+        head = f.read(HEADER_BYTES)
+    if len(head) < HEADER_BYTES:
+        raise ValueError(
+            f"{path}: truncated token-file header "
+            f"({len(head)} of {HEADER_BYTES} bytes)")
+    blob = head.split(b"\x00", 1)[0]
+    try:
+        meta = json.loads(blob)
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise ValueError(
+            f"{path}: corrupt token-file header (not parseable JSON: {e})"
+        ) from e
+    if not isinstance(meta, dict) or meta.get("magic") != MAGIC:
         raise ValueError(f"{path}: not a {MAGIC} file")
-    return TokenFileMeta(dtype=np.dtype(meta["dtype"]), shape=tuple(meta["shape"]))
+    try:
+        dtype = np.dtype(meta["dtype"])
+        shape = tuple(int(d) for d in meta["shape"])
+    except (KeyError, TypeError, ValueError) as e:
+        raise ValueError(
+            f"{path}: corrupt token-file header (bad dtype/shape field: {e})"
+        ) from e
+    if not shape or any(d < 0 for d in shape):
+        raise ValueError(f"{path}: corrupt token-file header (shape {shape})")
+    return TokenFileMeta(dtype=dtype, shape=shape)
 
 
 def decode_rows(meta: TokenFileMeta, buf, start_row: int, num_rows: int) -> np.ndarray:

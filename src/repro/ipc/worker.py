@@ -42,7 +42,7 @@ from typing import Optional, Tuple
 
 from repro.io.layout import Splinter
 from repro.io.numa import first_touch, pin_thread_to_cpus
-from repro.io.posix import PosixFile
+from repro.io.posix import PosixFile, ShardedFile
 from repro.ipc.ring import (
     PIN_FAILED,
     PIN_NONE,
@@ -91,6 +91,12 @@ class WorkerSpec:
     # keep polling a ring nobody will ever drain while pinning the
     # session-sized arena mapping in tmpfs.
     parent_pid: int = 0
+    # FileSet sessions: the ShardedFile segment table — (path, global_start,
+    # file_base, nbytes, shard_id) per non-empty shard. The worker rebuilds
+    # its OWN ShardedFile from these paths (one fresh fd per shard, nothing
+    # inherited — the same fd-hygiene contract as file_path); splinter
+    # offsets are then global data-space bytes. None = single-file session.
+    shards: Optional[Tuple[Tuple[str, int, int, int, int], ...]] = None
 
 
 def worker_main(spec: WorkerSpec) -> None:
@@ -137,7 +143,10 @@ def worker_main(spec: WorkerSpec) -> None:
         if not ring.wait_go(should_abort=orphaned):   # cancelled / orphaned
             ring.set_state(ST_DONE)
             return
-        f = PosixFile.open(spec.file_path)   # own fd — never inherited
+        if spec.shards is not None:          # FileSet: own fd per shard
+            f = ShardedFile.from_segments(spec.shards)
+        else:
+            f = PosixFile.open(spec.file_path)   # own fd — never inherited
         f.fault = spec.io_fault
         try:
             for sp in spec.splinters:

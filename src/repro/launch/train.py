@@ -46,7 +46,12 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--num-readers", type=int, default=4)
     ap.add_argument("--num-consumers", type=int, default=16)
-    ap.add_argument("--data", default="/tmp/repro_train_tokens.bin")
+    ap.add_argument("--data", nargs="+",
+                    default=["/tmp/repro_train_tokens.bin"],
+                    help="token file path(s); more than one path opens the"
+                         " list as a FileSet — one logical global row space"
+                         " over all shards (data/fileset.py), read through"
+                         " one shard-aware session per step window")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpts")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--resume", action="store_true")
@@ -116,9 +121,21 @@ def main() -> None:
 
     # -- corpus + CkIO pipeline ------------------------------------------------
     need = args.steps * args.global_batch * (args.seq + 1) + 1024
-    if not os.path.exists(args.data):
-        print(f"writing synthetic corpus: {need} tokens")
-        make_token_file(args.data, need, cfg.vocab_size)
+    per_shard = (need + len(args.data) - 1) // len(args.data)
+    for i, p in enumerate(args.data):
+        if not os.path.exists(p):
+            print(f"writing synthetic corpus shard: {p} ({per_shard} tokens)")
+            make_token_file(p, per_shard, cfg.vocab_size, seed=i)
+    if len(args.data) > 1:
+        # Multi-shard corpus: one FileSet manifest = one logical row space;
+        # the pipeline below is unchanged (shard starts become hard stripe
+        # bounds inside each session plan).
+        from repro.data import FileSet
+
+        data_source = FileSet.build(args.data)
+        print(f"fileset: {data_source.describe()}")
+    else:
+        data_source = args.data[0]
     # One host: a single scheduler node of num_pes PEs, so the NUMA
     # topology's node grid matches the scheduler's (a mismatched grid is
     # rejected by place_readers at session start).
@@ -128,7 +145,7 @@ def main() -> None:
                                    pes_per_node=num_pes)
                 if args.topology else None)
     pipe = CkIOPipeline(
-        args.data, args.global_batch, args.seq,
+        data_source, args.global_batch, args.seq,
         ckio=ckio, num_consumers=args.num_consumers,
         file_opts=FileOptions(num_readers=args.num_readers,
                               adaptive_splinters=args.adaptive_splinters,
@@ -201,6 +218,8 @@ def main() -> None:
         "stream": pipe.stream.summary() if args.streaming else None,
         "locality": (summary.director.locality.summary()
                      if topology is not None else None),
+        "shards": (summary.director.shards.summary()
+                   if len(args.data) > 1 else None),
     }, indent=2))
 
 
