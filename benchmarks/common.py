@@ -11,6 +11,9 @@ warm-cache numbers measure memory bandwidth, not storage.
 """
 from __future__ import annotations
 
+import ctypes
+import ctypes.util
+import mmap
 import os
 import statistics
 import time
@@ -34,8 +37,98 @@ def ensure_file(name: str, mb: int) -> str:
     return path
 
 
+# -- page-cache residency (mincore) -------------------------------------------
+# "Cold cache" must be MEASURED, not assumed: posix_fadvise(DONTNEED)
+# returning 0 only means the kernel accepted the advice — pages pinned by
+# another mapping (or a racing readahead) stay resident and the trial then
+# measures memcpy, not storage. ``residency`` asks mincore() directly.
+def residency(path: str) -> Optional[float]:
+    """Fraction of ``path``'s pages resident in the page cache, or ``None``
+    when mincore isn't usable (non-Linux libc, empty file, sandbox)."""
+    try:
+        libc = ctypes.CDLL(ctypes.util.find_library("c") or "libc.so.6",
+                           use_errno=True)
+        libc.mincore  # AttributeError if the symbol is missing
+    except (OSError, AttributeError):
+        return None
+    try:
+        size = os.path.getsize(path)
+        if size <= 0:
+            return None
+        npages = (size + mmap.PAGESIZE - 1) // mmap.PAGESIZE
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            # MAP_PRIVATE + PROT_WRITE: ctypes.from_buffer needs a writable
+            # buffer; private COW keeps the file itself untouched.
+            m = mmap.mmap(fd, size, flags=mmap.MAP_PRIVATE,
+                          prot=mmap.PROT_READ | mmap.PROT_WRITE)
+        finally:
+            os.close(fd)
+        try:
+            vec = (ctypes.c_ubyte * npages)()
+            addr = ctypes.addressof(ctypes.c_char.from_buffer(m))
+            if libc.mincore(ctypes.c_void_p(addr), ctypes.c_size_t(size),
+                            vec) != 0:
+                return None
+            return sum(b & 1 for b in vec) / npages
+        finally:
+            del vec
+            m.close()
+    except (OSError, ValueError):
+        return None
+
+
 def cold(path: str) -> bool:
-    return drop_page_cache(path)
+    """Evict ``path`` and VERIFY the eviction: True only when fadvise
+    succeeded and mincore confirms (almost) nothing stayed resident. When
+    mincore is unavailable the fadvise return is all we have (advisory)."""
+    dropped = drop_page_cache(path)
+    if not dropped:
+        return False
+    frac = residency(path)
+    if frac is None:                # can't verify: trust the advice
+        return True
+    return frac <= 0.02
+
+
+_CACHE_STATE: Optional[Dict] = None
+
+
+def cache_state() -> Dict:
+    """One self-check per process: can this host actually produce a cold
+    cache, and can we prove it? Stamped into every benchmark artifact so a
+    number can never silently come from a warm page cache.
+
+    ``eviction``: "verified" (fadvise worked AND mincore shows the pages
+    gone), "advisory" (fadvise worked, mincore unavailable), or
+    "unavailable" (fadvise failed — treat cold numbers as warm).
+    """
+    global _CACHE_STATE
+    if _CACHE_STATE is not None:
+        return _CACHE_STATE
+    probe = os.path.join(BENCH_DIR, "cache_probe.bin")
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    with open(probe, "wb") as f:
+        f.write(os.urandom(4 * mmap.PAGESIZE))
+    with open(probe, "rb") as f:
+        f.read()                    # warm it
+    warm = residency(probe)
+    dropped = drop_page_cache(probe)
+    frac = residency(probe)
+    if dropped and frac is not None and frac <= 0.02:
+        ev = "verified"
+    elif dropped:
+        ev = "advisory"
+    else:
+        ev = "unavailable"
+    _CACHE_STATE = {
+        "eviction": ev,
+        "mincore": frac is not None,
+        "probe_warm_resident": warm,
+        "probe_cold_resident": frac,
+    }
+    os.unlink(probe)
+    return _CACHE_STATE
 
 
 @dataclass
@@ -98,6 +191,9 @@ def write_report(name: str, report: Dict, quick: bool) -> str:
     out = (os.path.join(BENCH_DIR, f"BENCH_{name}.quick.json") if quick
            else os.path.join(repo_root, f"BENCH_{name}.json"))
     os.makedirs(os.path.dirname(out), exist_ok=True)
+    # Every artifact carries the host's eviction capability: a reader can
+    # tell verified-cold numbers from advisory/warm ones without rerunning.
+    report.setdefault("cache_state", cache_state())
     with open(out, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")

@@ -1,0 +1,294 @@
+"""Cold-cache read engine benchmark: blocking preadv vs depth-managed async
+submission vs O_DIRECT (io/submit.py), plus QueueTuner validation.
+
+Four tracked contracts (asserted, not assumed):
+
+1. **Depth wins under PFS service dynamics** — with the modeled parallel
+   file system (``benchmarks/pfs_model.py``) charging every read its RPC +
+   fair-shared-bandwidth service time, a ``queue_depth=8`` drain must beat
+   the blocking per-splinter loop by >= 1.5x. The model leg is the GATE
+   because it is deterministic: a local page-cached ext4 cannot reproduce
+   Lustre's concurrency curve, the model supplies it on principled
+   parameters (the delay runs on the submitter pool's threads, so in-flight
+   requests overlap exactly as concurrent RPCs would; the blocking loop
+   pays them serially, exactly as a synchronous client would).
+
+2. **Cold-cache honesty** — the real-storage legs evict the file first and
+   VERIFY the eviction via mincore (``benchmarks/common.py``); every
+   artifact carries ``cache_state`` so a warm number can never masquerade
+   as cold. When the host cannot produce a verified cold cache the local
+   legs are recorded as warm (and the ratio gate stays on the model leg).
+
+3. **Bit-identity + zero-copy everywhere** — every mode ({blocking, async,
+   direct}) drains bit-identically to the file content through borrowed
+   arena views with ``bytes_copied == 0``. O_DIRECT runs end-to-end (the
+   session plan sits on the probed FS block grid) — a misaligned request
+   would fail fast with ``DirectIOError``, never silently fall back.
+
+4. **QueueTuner converges** — the hill-climber (core/autotune.py) driven
+   by modeled per-session throughput must land within 10% of the best
+   fixed (queue_depth, readahead) grid point, and the ONLINE path (Director
+   ``record_session`` observers under ``adaptive_queue=True``) must feed it
+   real session observations.
+
+Writes ``BENCH_coldpath.json`` at the repo root (full mode; quick mode
+writes the scratch-dir artifact only).
+
+Usage: python benchmarks/perf_coldpath.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import common
+from benchmarks.pfs_model import PFSModel
+from repro.core import CkIO, FileOptions
+from repro.core.autotune import QueueTuner
+from repro.io.submit import io_uring_supported
+
+
+def workload(quick: bool):
+    if quick:
+        return dict(session_mb=16, trials=2, splinter_kb=512, depth=8)
+    return dict(session_mb=96, trials=3, splinter_kb=2048, depth=8)
+
+
+# -- session drain helper ------------------------------------------------------
+def drain(path: str, nbytes: int, opts: FileOptions, expect_sha: str) -> dict:
+    """One session drain: seconds to last splinter, verified bit-identical
+    through a borrowed (zero-copy) view."""
+    ck = CkIO(num_pes=2)
+    fh = ck.open_sync(path, opts)
+    t0 = time.perf_counter()
+    sess = ck.start_read_session_sync(fh, nbytes, 0)
+    if not sess.readers.join(600):
+        raise RuntimeError("drain did not complete")
+    dt = time.perf_counter() - t0
+    view = ck.read_view_sync(sess, nbytes, 0)
+    match = hashlib.sha256(view).hexdigest() == expect_sha
+    m = sess.metrics
+    out = {
+        "wall_s": round(dt, 4),
+        "MBps": round(nbytes / dt / 1e6, 1),
+        "identical": bool(match),
+        "bytes_copied": int(m.bytes_copied),
+        "backend": m.submit_backend,
+        "queue_depth": int(m.queue_depth),
+        "inflight_hwm": int(m.inflight_hwm),
+        "direct_io": bool(m.direct_io),
+        "direct_tail_reads": int(m.recovery.direct_tail_reads),
+    }
+    ck.close_read_session_sync(sess)
+    ck.close_sync(fh)
+    return out
+
+
+# -- leg 1: modeled PFS, blocking vs depth-managed -----------------------------
+def model_leg(path: str, nbytes: int, wl: dict, expect_sha: str) -> dict:
+    """Deterministic gate: same single reader, same splinters, same modeled
+    service times — only the submission discipline differs."""
+    sb = wl["splinter_kb"] << 10
+
+    def run_mode(depth: int) -> dict:
+        model = PFSModel()              # fresh inflight state per mode
+        return drain(path, nbytes, FileOptions(
+            num_readers=1, splinter_bytes=sb,
+            queue_depth=depth, submit_mode="threads" if depth else "auto",
+            delay_model=model.reader_delay_model(),
+        ), expect_sha)
+
+    blocking, managed = [], []
+    for _ in range(wl["trials"]):
+        blocking.append(run_mode(0))
+        managed.append(run_mode(wl["depth"]))
+    b_best = min(t["wall_s"] for t in blocking)
+    m_best = min(t["wall_s"] for t in managed)
+    return {
+        "mode": "pfs_model",
+        "blocking": blocking,
+        "depth_managed": managed,
+        "speedup_x": round(b_best / m_best, 2),
+        "identical": all(t["identical"] for t in blocking + managed),
+        "bytes_copied": max(t["bytes_copied"] for t in blocking + managed),
+    }
+
+
+# -- leg 2: real storage, cold cache where the host allows ---------------------
+def local_leg(path: str, nbytes: int, wl: dict, expect_sha: str) -> dict:
+    sb = wl["splinter_kb"] << 10
+    state = common.cache_state()
+    modes = {
+        "blocking": FileOptions(num_readers=2, splinter_bytes=sb),
+        "depth_threads": FileOptions(num_readers=2, splinter_bytes=sb,
+                                     queue_depth=wl["depth"],
+                                     submit_mode="threads",
+                                     readahead_bytes=4 << 20),
+        "depth_auto": FileOptions(num_readers=2, splinter_bytes=sb,
+                                  queue_depth=wl["depth"]),
+        "direct": FileOptions(num_readers=2, splinter_bytes=sb,
+                              queue_depth=wl["depth"], direct_io=True),
+    }
+    results = {}
+    for name, opts in modes.items():
+        trials = []
+        for _ in range(wl["trials"]):
+            evicted = common.cold(path)
+            t = drain(path, nbytes, opts, expect_sha)
+            t["cold"] = bool(evicted)
+            trials.append(t)
+        results[name] = {
+            "trials": trials,
+            "best_MBps": max(t["MBps"] for t in trials),
+            "cold": all(t["cold"] for t in trials),
+        }
+    b = min(t["wall_s"] for t in results["blocking"]["trials"])
+    d = min(t["wall_s"] for t in results["depth_auto"]["trials"])
+    return {
+        "mode": "local",
+        "cache_state": state,
+        "io_uring_available": io_uring_supported(),
+        **results,
+        "depth_vs_blocking_x": round(b / d, 2),
+        "identical": all(t["identical"]
+                         for r in results.values() for t in r["trials"]),
+        "bytes_copied": max(t["bytes_copied"]
+                            for r in results.values() for t in r["trials"]),
+        "direct_end_to_end": all(t["direct_io"]
+                                 for t in results["direct"]["trials"]),
+    }
+
+
+# -- leg 3: QueueTuner vs exhaustive grid on the PFS model ---------------------
+def model_throughput(depth: int, splinter_bytes: int,
+                     model: PFSModel) -> float:
+    """Closed-form steady-state drain throughput at a fixed queue depth
+    under the PFS service model: ``depth`` requests run concurrently, each
+    served at the fair-shared stream bandwidth."""
+    d = max(1, depth)
+    bw = min(model.single_stream_bw, model.aggregate_bw / d)
+    service = model.per_rpc_s + splinter_bytes / bw
+    return d * splinter_bytes / service
+
+
+def tuner_leg(wl: dict) -> dict:
+    sb = wl["splinter_kb"] << 10
+    model = PFSModel()
+    tuner = QueueTuner()
+    grid = [(d, r) for d in (1, 2, 4, 8, 16, 32, 64)
+            for r in (0, 4 << 20)]
+    grid_best = max(model_throughput(d, sb, model) for d, _ in grid)
+    rounds = []
+    for _ in range(30):
+        d, r = tuner.suggest(2, 0)
+        tput = model_throughput(d, sb, model)
+        tuner.record(d, r, tput)
+        rounds.append((d, r, round(tput / 1e6, 1)))
+    converged = tuner.best()
+    converged_tput = model_throughput(converged[0], sb, model)
+    return {
+        "grid_best_MBps": round(grid_best / 1e6, 1),
+        "tuner_best": list(converged),
+        "tuner_best_MBps": round(converged_tput / 1e6, 1),
+        "within_10pct": bool(converged_tput >= 0.9 * grid_best),
+        "rounds": rounds[-6:],
+    }
+
+
+def online_leg(path: str, nbytes: int, wl: dict, expect_sha: str) -> dict:
+    """The observer path for real: sessions under ``adaptive_queue=True``
+    must feed the Director's QueueTuner through ``record_session``."""
+    sb = wl["splinter_kb"] << 10
+    ck = CkIO(num_pes=2)
+    fh = ck.open_sync(path, FileOptions(
+        num_readers=1, splinter_bytes=sb,
+        queue_depth=4, adaptive_queue=True))
+    depths = []
+    for _ in range(3):
+        sess = ck.start_read_session_sync(fh, nbytes, 0)
+        sess.readers.join(600)
+        depths.append(sess.metrics.queue_depth)
+        ck.close_read_session_sync(sess)
+    nobs = sum(len(v) for v in ck.director.queue_tuner.observations.values())
+    keys = sorted(ck.director.queue_tuner.observations)
+    ck.close_sync(fh)
+    return {
+        "session_depths": depths,
+        "tuner_observations": int(nobs),
+        "tuner_keys": [list(k) for k in keys],
+        "observed": bool(nobs >= 3),
+    }
+
+
+def run(quick: bool = False) -> dict:
+    wl = workload(quick)
+    nbytes = wl["session_mb"] << 20
+    path = common.ensure_file("coldpath", wl["session_mb"])
+    with open(path, "rb") as f:
+        expect_sha = hashlib.sha256(f.read(nbytes)).hexdigest()
+
+    model = model_leg(path, nbytes, wl, expect_sha)
+    local = local_leg(path, nbytes, wl, expect_sha)
+    # Tuner legs on a small window so the online sessions stay cheap.
+    small = min(nbytes, 8 << 20)
+    small_sha = hashlib.sha256(open(path, "rb").read(small)).hexdigest()
+    tuner = tuner_leg(wl)
+    online = online_leg(path, small, wl, small_sha)
+
+    report = {
+        "bench": "perf_coldpath",
+        "workload": {**wl, "session_bytes": nbytes},
+        "pfs_model": model,
+        "local": local,
+        "queue_tuner": tuner,
+        "queue_tuner_online": online,
+        "note": "The >= 1.5x depth-vs-blocking gate lives on the pfs_model "
+                "leg (deterministic service dynamics; a page-cached local "
+                "ext4 has no concurrency curve to win on). Local legs are "
+                "recorded with their verified cache state; 'direct' runs "
+                "O_DIRECT end-to-end through the session arena.",
+    }
+    common.emit("coldpath_model_blocking", 0.0,
+                f"{min(t['MBps'] for t in model['blocking']):.0f}MBps")
+    common.emit("coldpath_model_depth", 0.0,
+                f"{max(t['MBps'] for t in model['depth_managed']):.0f}MBps")
+    common.emit("coldpath_model_speedup", 0.0, f"{model['speedup_x']}x")
+    common.emit("coldpath_local_direct", 0.0,
+                f"{local['direct']['best_MBps']:.0f}MBps")
+    common.emit("coldpath_tuner", 0.0,
+                f"{'ok' if tuner['within_10pct'] else 'FAIL'}")
+    common.write_report("coldpath", report, quick)
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small session / fewer trials (CI smoke)")
+    args = ap.parse_args()
+    report = run(quick=args.quick)
+    ok = (report["pfs_model"]["speedup_x"] >= 1.5
+          and report["pfs_model"]["identical"]
+          and report["pfs_model"]["bytes_copied"] == 0
+          and report["local"]["identical"]
+          and report["local"]["bytes_copied"] == 0
+          and report["local"]["direct_end_to_end"]
+          and report["queue_tuner"]["within_10pct"]
+          and report["queue_tuner_online"]["observed"])
+    print(f"# model_speedup={report['pfs_model']['speedup_x']}x "
+          f"local_depth={report['local']['depth_vs_blocking_x']}x "
+          f"cache={report['local']['cache_state']['eviction']} "
+          f"tuner_within_10pct={report['queue_tuner']['within_10pct']} "
+          f"{'OK' if ok else 'FAIL'}")
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

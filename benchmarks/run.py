@@ -118,6 +118,15 @@ def perf_fileset() -> None:
     m.run(quick=common.QUICK)
 
 
+def perf_coldpath() -> None:
+    # Writes BENCH_coldpath.json at the repo root (cold-cache read engine:
+    # blocking preadv vs depth-managed async submission vs O_DIRECT —
+    # >= 1.5x under the modeled PFS, bit-identical, zero-copy, QueueTuner
+    # within 10% of the fixed grid best, mincore-verified eviction state).
+    from benchmarks import perf_coldpath as m
+    m.run(quick=common.QUICK)
+
+
 ALL = [
     fig1_naive_overdecomposition,
     fig2_disk_vs_network,
@@ -135,6 +144,7 @@ ALL = [
     perf_shm,
     perf_recovery,
     perf_fileset,
+    perf_coldpath,
 ]
 
 

@@ -37,6 +37,17 @@
 #                                            sharding stages 1x the window
 #                                            balanced across devices, legacy
 #                                            per-call fallback ~2x)
+#   benchmarks/perf_coldpath.py --quick      cold-cache read engine (depth-
+#                                            managed async submission >= 1.5x
+#                                            blocking under the modeled PFS,
+#                                            O_DIRECT end-to-end, QueueTuner
+#                                            within 10% of the fixed grid
+#                                            best, mincore-verified eviction
+#                                            state stamped in the artifact;
+#                                            hosts without eviction still run
+#                                            — local legs record warm)
+# Bench legs run under scripts/env.sh (tcmalloc LD_PRELOAD + quiet XLA env
+# when available; silent degrade otherwise).
 # Fault matrix: the seeded fault-injection tests replayed under several
 # CKIO_FAULT_SEED values (tier-1 already runs the full recovery suite once
 # under the default seed; the matrix re-derives the FaultPlan from each
@@ -50,6 +61,10 @@ cd "$(dirname "$0")/.."
 
 echo "== tier-1 tests =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+# Bench legs run under the tuned environment (tcmalloc preload + quiet
+# XLA logging when the host has them; scripts/env.sh degrades silently).
+source scripts/env.sh
 
 echo "== hot-path benchmark (smoke) =="
 python benchmarks/perf_hotpath.py --quick
@@ -71,6 +86,9 @@ python benchmarks/perf_recovery.py --quick
 
 echo "== fileset benchmark (smoke, sharded sessions + staged-bytes ledger) =="
 python benchmarks/perf_fileset.py --quick
+
+echo "== cold-path benchmark (smoke, depth-managed submission + O_DIRECT) =="
+python benchmarks/perf_coldpath.py --quick
 
 echo "== fault matrix (seeded deterministic replay) =="
 for seed in 11 20260809 424242; do

@@ -18,15 +18,25 @@ Three pieces:
   straggler-stolen tails — finer-grained stealing, tighter completion
   bound).
 
-``AutoTuner`` and ``SplinterSizer`` share one observation path:
-``record_session(metrics)`` takes the ``SessionMetrics`` every session
-already collects — the Director feeds both on session close, so any
-controller added later observes for free.
+* ``QueueTuner`` — the cold-path controller: a deterministic hill-climb
+  over the 2-D (queue depth, readahead window) space of the async
+  submission layer (``io/submit.py``). Depth trades request concurrency
+  against FS congestion (TASIO's central knob); the readahead window
+  trades kernel prefetch reach against cache churn. Both knobs move
+  multiplicatively (the response curves are log-shaped: doubling depth
+  matters at 2, not at 62), observations are keyed by the exact
+  (depth, readahead) pair, and exploration follows a fixed neighbour
+  order — same-history determinism like ``AutoTuner``.
+
+``AutoTuner``, ``SplinterSizer`` and ``QueueTuner`` share one observation
+path: ``record_session(metrics)`` takes the ``SessionMetrics`` every
+session already collects — the Director feeds all three on session close,
+so any controller added later observes for free.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.metrics import SessionMetrics
 from repro.io.posix import DEFAULT_ALIGN, aligned_floor
@@ -93,6 +103,91 @@ class AutoTuner:
         # Fixed exploration order: best, half, double — first untried wins.
         for cand in (best, max(1, best // 2), best * 2):
             if cand not in self.observations and cand <= 4 * self.num_pes:
+                return cand
+        return best
+
+
+@dataclass
+class QueueTuner:
+    """Deterministic 2-D hillclimb over (queue depth, readahead window).
+
+    Observations are mean throughput per exact ``(depth, readahead)`` pair,
+    folded in through the shared ``record_session`` hook (sessions that ran
+    the blocking loop — ``queue_depth == 0`` — or read nothing carry no
+    signal and are skipped). ``suggest`` explores the fixed-order
+    multiplicative neighbourhood of the current best — depth doubled,
+    halved, then readahead doubled, halved, then the diagonal — first
+    unobserved candidate wins; a fully-observed neighbourhood exploits the
+    best. Readahead is quantized to ``readahead_quantum`` so float jitter
+    cannot mint spurious grid points; depth clamps to
+    ``[min_depth, max_depth]``.
+    """
+
+    min_depth: int = 1
+    max_depth: int = 64
+    max_readahead: int = 64 * 1024 * 1024
+    readahead_quantum: int = 1024 * 1024
+    observations: Dict[Tuple[int, int], List[float]] = field(
+        default_factory=dict)
+
+    def _quant(self, readahead: int) -> int:
+        q = self.readahead_quantum
+        r = (max(0, int(readahead)) // q) * q
+        return min(r, self.max_readahead)
+
+    def _clamp(self, depth: int, readahead: int) -> Tuple[int, int]:
+        return (min(max(int(depth), self.min_depth), self.max_depth),
+                self._quant(readahead))
+
+    def record(self, depth: int, readahead: int, throughput: float) -> None:
+        key = self._clamp(depth, readahead)
+        self.observations.setdefault(key, []).append(throughput)
+
+    def record_session(self, metrics: SessionMetrics) -> None:
+        """Shared observation hook (Director feeds this on session close)."""
+        bps = metrics.throughput_bytes_per_s()
+        if metrics.queue_depth > 0 and bps > 0:
+            self.record(metrics.queue_depth, metrics.readahead_bytes, bps)
+
+    def _score(self, key: Tuple[int, int]) -> float:
+        obs = self.observations.get(key, [])
+        return sum(obs) / len(obs) if obs else float("-inf")
+
+    def best(self) -> Optional[Tuple[int, int]]:
+        if not self.observations:
+            return None
+        return max(self.observations, key=self._score)
+
+    def best_throughput(self) -> float:
+        b = self.best()
+        return self._score(b) if b is not None else 0.0
+
+    def _neighbourhood(self, d: int, r: int) -> List[Tuple[int, int]]:
+        q = self.readahead_quantum
+        raw = [
+            (d, r),
+            (d * 2, r),
+            (max(self.min_depth, d // 2), r),
+            (d, r * 2 if r else q),
+            (d, r // 2 if r >= 2 * q else 0),
+            (d * 2, r * 2 if r else q),
+        ]
+        out: List[Tuple[int, int]] = []
+        for cand in raw:
+            c = self._clamp(*cand)
+            if c not in out:
+                out.append(c)
+        return out
+
+    def suggest(self, default_depth: int,
+                default_readahead: int = 0) -> Tuple[int, int]:
+        """(queue_depth, readahead_bytes) for the next session."""
+        if not self.observations:
+            return self._clamp(default_depth, default_readahead)
+        best = self.best()
+        assert best is not None
+        for cand in self._neighbourhood(*best):
+            if cand not in self.observations:
                 return cand
         return best
 

@@ -36,7 +36,8 @@ from repro.core.placement import Topology
 from repro.core.scheduler import TaskScheduler
 from repro.io.layout import StripePlan, Splinter, splinters_covering
 from repro.io.numa import first_touch, pin_thread_to_cpus
-from repro.io.posix import PosixFile
+from repro.io.posix import DEFAULT_ALIGN, DirectIOError, PosixFile
+from repro.io.submit import AsyncReadEngine
 from repro.ipc.ring import (
     PIN_NONE,
     PIN_OK,
@@ -123,6 +124,20 @@ class ReaderOptions:
     # thread) before reading, so first-touch places every stripe on its
     # reader's domain without defeating the non-zero-filled np.empty arena.
     prefault_arena: bool = False
+    # -- cold-cache read engine (io/submit.py) -------------------------------
+    # The file handle was opened O_DIRECT (reads DMA past the page cache).
+    # start() validates the arena/plan against the probed block size and
+    # raises io.posix.DirectIOError on any structural misalignment.
+    direct_io: bool = False
+    # In-flight reads per reader thread/worker: 0/1 = the blocking
+    # per-splinter loop (the seed behaviour); >= 2 = depth-managed async
+    # submission (io_uring or a preadv pool, see submit_mode).
+    queue_depth: int = 0
+    # WILLNEED window advised ahead of the submission frontier (bytes;
+    # buffered files only — O_DIRECT bypasses the page cache).
+    readahead_bytes: int = 0
+    # "auto" | "io_uring" | "threads" (io/submit.py make_submitter).
+    submit_mode: str = "auto"
 
 
 class NetworkModel:
@@ -294,8 +309,20 @@ class BufferReaderSet:
         """Allocate the session arena (subclass hook). np.empty skips the
         memset a bytearray would do — every byte is overwritten by preadv
         anyway, and for multi-GB sessions the zero-fill pass dominated
-        session start (it sat on the critical path of the first request)."""
-        arena = np.empty(plan.nbytes, dtype=np.uint8)
+        session start (it sat on the critical path of the first request).
+
+        Direct-I/O sessions need the arena base on the FS block grid
+        (O_DIRECT DMA targets), but numpy only guarantees 16-byte
+        alignment for small allocations — over-allocate one block and
+        slice to the grid (the parent buffer stays alive through
+        ``.base``; costs at most ``block_size`` bytes per session)."""
+        if getattr(self.file, "direct_io", False):
+            bs = getattr(self.file, "block_size", DEFAULT_ALIGN)
+            raw = np.empty(plan.nbytes + bs, dtype=np.uint8)
+            skew = (-raw.ctypes.data) % bs
+            arena = raw[skew: skew + plan.nbytes]
+        else:
+            arena = np.empty(plan.nbytes, dtype=np.uint8)
         if self.opts.prefault_arena and self.opts.topology is None:
             # Legacy (topology-blind) prefault — explicit memset: np.zeros
             # would calloc lazily-zeroed pages without touching them —
@@ -305,6 +332,40 @@ class BufferReaderSet:
             arena.fill(0)
         return arena
 
+    def _validate_direct_io(self) -> None:
+        """Fail fast when a direct-I/O session cannot satisfy the probed
+        block alignment — the no-silent-fallback half of the O_DIRECT
+        contract. Checks the arena base (DMA target), the session offset,
+        and every splinter's file offset (the splinter grid); sub-block
+        *lengths* (tails) are legal — they finish through the buffered fd,
+        counted."""
+        if not getattr(self.file, "direct_io", False) or not self.plan.nbytes:
+            return
+        bs = getattr(self.file, "block_size", DEFAULT_ALIGN)
+        problems: List[str] = []
+        base_addr = self._arena.ctypes.data
+        if base_addr % bs:
+            problems.append(
+                f"arena base 0x{base_addr:x} is not {bs}-byte aligned")
+        if self.plan.offset % bs:
+            problems.append(
+                f"session offset {self.plan.offset} is off the {bs}-byte "
+                f"block grid")
+        bad_sp = [sp for sp in self.plan.splinters if sp.offset % bs]
+        if bad_sp:
+            problems.append(
+                f"{len(bad_sp)} splinter offset(s) off the {bs}-byte grid "
+                f"(first: splinter {bad_sp[0].index} at {bad_sp[0].offset}) "
+                f"— plan the session with align=fs_block_size(path)")
+        # Arena positions must land on the grid too (the DMA destination is
+        # base + (sp.offset - plan.offset); with base and plan.offset
+        # aligned this follows from aligned splinter offsets, so no extra
+        # scan is needed).
+        if problems:
+            raise DirectIOError(
+                "direct_io=True cannot run this session: "
+                + "; ".join(problems))
+
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> None:
         """Begin greedy prefetch: every reader starts reading immediately
@@ -312,7 +373,11 @@ class BufferReaderSet:
         without waiting for client requests")."""
         if self.started:
             return
+        self._validate_direct_io()
         self.started = True
+        # Recorded here (not only in the async loop) so blocking-path
+        # sessions still report their open mode.
+        self.metrics.direct_io = bool(getattr(self.file, "direct_io", False))
         nthreads = min(
             max(1, self.plan.num_readers), max(1, self.opts.max_io_threads)
         )
@@ -450,6 +515,9 @@ class BufferReaderSet:
             finally:
                 with self._lock:
                     self._setup_pending -= 1
+        if self.opts.queue_depth >= 2:
+            self._reader_main_async(tid, nthreads)
+            return
         while not self._cancelled:
             sp = self._next_splinter(tid, nthreads)
             if sp is None:
@@ -494,6 +562,76 @@ class BufferReaderSet:
                 # free of the extra lock acquisition.
                 self.locality.record_splinter(sp.reader, sp.nbytes)
             self._mark_done(sp)
+
+    def _reader_main_async(self, tid: int, nthreads: int) -> None:
+        """Depth-managed drain: same work source (``_next_splinter`` — so
+        stealing survives), same completion fan-out (``_mark_done``), but
+        up to ``queue_depth`` splinter reads in flight through
+        ``io/submit.py`` instead of one blocking pread at a time."""
+        opts = self.opts
+        delay = None
+        if opts.delay_model is not None:
+            dm = opts.delay_model
+
+            def delay(sp, nbytes):
+                d = dm(sp.reader, sp)
+                if d > 0:
+                    time.sleep(d)
+        eng = AsyncReadEngine(
+            self.file, opts.queue_depth,
+            readahead_bytes=opts.readahead_bytes,
+            mode=opts.submit_mode,
+            stats=self.metrics.recovery,
+            fault=opts.io_fault,
+            delay=delay,
+        )
+        self.metrics.record_submit_config(
+            opts.queue_depth, opts.readahead_bytes, eng.kind,
+            bool(getattr(self.file, "direct_io", False)))
+
+        def next_item():
+            while not self._cancelled:
+                sp = self._next_splinter(tid, nthreads)
+                if sp is not None:
+                    lo = sp.offset - self._base
+                    view = memoryview(self._arena)[lo: lo + sp.nbytes]
+                    return (sp, sp.offset, view)
+                if not opts.work_stealing:
+                    return None
+                with self._lock:
+                    has_work = any(self._pending)
+                    g = self._setup_pending > 0
+                if not has_work:
+                    return None
+                # Unclaimed splinters remain but stealing is setup-gated
+                # (or the gate lifted between the failed pop and this
+                # check) — retry, same as the synchronous loop.
+                if g:
+                    time.sleep(0.0005)
+            return None
+
+        def on_complete(sp, n, dt):
+            if n != sp.nbytes and not self._cancelled:
+                raise IOError(
+                    f"short read: wanted {sp.nbytes} at {sp.offset}, got {n}"
+                )
+            # Folded per completion (not only in the finally below): join()
+            # wakes on the last _mark_done, possibly before this thread's
+            # engine teardown runs — the high-water mark must already be
+            # visible to that waiter.
+            self.metrics.record_inflight_hwm(eng.max_inflight)
+            self.metrics.record_read(sp.reader, sp.nbytes, dt)
+            if self._shard_of is not None:
+                self.metrics.record_shard_read(self._shard_of(sp.offset),
+                                               sp.nbytes)
+            if opts.topology is not None:
+                self.locality.record_splinter(sp.reader, sp.nbytes)
+            self._mark_done(sp)
+
+        try:
+            eng.run(next_item, on_complete, stop=lambda: self._cancelled)
+        finally:
+            self.metrics.record_inflight_hwm(eng.max_inflight)
 
     def _mark_done(self, sp: Splinter, t_arrival: Optional[float] = None) -> None:
         """Record one splinter completion and fan out waiters/subscribers.
@@ -798,8 +936,23 @@ class ProcessReaderSet(BufferReaderSet):
     def start(self) -> None:
         if self.started:
             return
+        self._validate_direct_io()
         self.started = True
+        self.metrics.direct_io = bool(getattr(self.file, "direct_io", False))
         self.metrics.session_started(self.plan.nbytes, self.plan.num_readers)
+        if self.opts.queue_depth >= 2:
+            # Workers decide io_uring-vs-threads themselves (their kernel
+            # view is authoritative); mirror the same selection rule here
+            # so the session metrics name the backend they will pick.
+            from repro.io.submit import io_uring_supported
+            kind = "io_uring" if (
+                self.opts.submit_mode in ("auto", "io_uring")
+                and getattr(self.file, "segments", None) is None
+                and self.opts.delay_model is None
+                and io_uring_supported()) else "threads"
+            self.metrics.record_submit_config(
+                self.opts.queue_depth, self.opts.readahead_bytes, kind,
+                bool(getattr(self.file, "direct_io", False)))
         if not self.plan.splinters:
             self._gates_open = True          # trivially: nothing to attach
             self._attached_evt.set()
@@ -865,6 +1018,10 @@ class ProcessReaderSet(BufferReaderSet):
                 ring_fault=self.opts.ring_fault,
                 parent_pid=os.getpid(),
                 shards=getattr(self.file, "worker_segments", None),
+                direct_io=self.opts.direct_io,
+                queue_depth=self.opts.queue_depth,
+                readahead_bytes=self.opts.readahead_bytes,
+                submit_mode=self.opts.submit_mode,
             )
             self._worker_splinters.append(spec.splinters)
             self._worker_retired.append(False)
@@ -1204,6 +1361,10 @@ class ProcessReaderSet(BufferReaderSet):
             ring_fault=self.opts.ring_fault,
             parent_pid=os.getpid(),
             shards=getattr(self.file, "worker_segments", None),
+            direct_io=self.opts.direct_io,
+            queue_depth=self.opts.queue_depth,
+            readahead_bytes=self.opts.readahead_bytes,
+            submit_mode=self.opts.submit_mode,
         )
         ctx = mp.get_context("spawn")
         p = ctx.Process(target=worker_main, args=(spec,), daemon=True,

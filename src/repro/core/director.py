@@ -27,9 +27,14 @@ from repro.core.metrics import (
 from repro.core.placement import place_readers
 from repro.core.scheduler import TaskScheduler
 from repro.core.session import FileHandle, FileOptions, Session
-from repro.core.autotune import AutoTuner, SplinterSizer, suggest_num_readers
+from repro.core.autotune import (
+    AutoTuner,
+    QueueTuner,
+    SplinterSizer,
+    suggest_num_readers,
+)
 from repro.io.layout import plan_session
-from repro.io.posix import PosixFile
+from repro.io.posix import DEFAULT_ALIGN, PosixFile
 
 
 class Manager:
@@ -67,8 +72,13 @@ class Director:
         # the streaming splinter-size controller). Extend by appending.
         self.tuner = AutoTuner(num_pes=sched.num_pes, num_nodes=sched.num_nodes)
         self.splinter_sizer = SplinterSizer()
+        # Cold-path submission controller: hill-climbs (queue_depth,
+        # readahead_bytes) from observed session throughput; consulted at
+        # session start when FileOptions.adaptive_queue is set.
+        self.queue_tuner = QueueTuner()
         self._observers = [self.tuner.record_session,
-                           self.splinter_sizer.record_session]
+                           self.splinter_sizer.record_session,
+                           self.queue_tuner.record_session]
         # Director-lifetime locality aggregate: each closing session's
         # per-session LocalityMetrics are merged here (cross-domain bytes,
         # per-reader splinter histograms) so benchmarks/drivers can read
@@ -95,7 +105,7 @@ class Director:
         self, path: str, opts: FileOptions, opened: CkCallback
     ) -> None:
         def do_open() -> None:
-            posix = PosixFile.open(path)
+            posix = PosixFile.open(path, direct_io=opts.direct_io)
             with self._lock:
                 fid = next(self._file_ids)
                 handle = FileHandle(id=fid, path=path, posix=posix, opts=opts)
@@ -115,7 +125,10 @@ class Director:
         ``describe()``) — the core layer never imports the data layer."""
 
         def do_open() -> None:
-            sharded = fileset.sharded_file()
+            # Only pass the kwarg when asked: ``sharded_file`` is duck-typed
+            # and pre-direct-io manifests keep working untouched.
+            sharded = (fileset.sharded_file(direct_io=True)
+                       if opts.direct_io else fileset.sharded_file())
             with self._lock:
                 fid = next(self._file_ids)
                 handle = FileHandle(
@@ -181,6 +194,10 @@ class Director:
                     splinter_bytes=splinter_bytes,
                     reader_splinter_bytes=reader_sizes,
                     hard_bounds=hard_bounds or None,
+                    # Stripe/splinter grid on the file's REAL block size
+                    # (statvfs probe at open) — with direct_io this is what
+                    # keeps every splinter offset O_DIRECT-legal.
+                    align=getattr(file.posix, "block_size", DEFAULT_ALIGN),
                 )
                 reader_pes = place_readers(
                     opts.placement, plan.num_readers, self.sched,
@@ -194,6 +211,19 @@ class Director:
                 # FileOptions) goes straight to the thread backend without
                 # re-attempting — and re-warning about — the spawn.
                 ropts = opts.reader_options()
+                if opts.adaptive_queue:
+                    # Dynamic cold-path tuning: observed session throughput
+                    # picks (queue_depth, readahead) via the QueueTuner's
+                    # explore-then-exploit neighbourhood walk; the explicit
+                    # FileOptions fields only seed the first session (an
+                    # unset/blocking depth seeds at 8 so the walk starts in
+                    # async territory).
+                    seed_depth = (opts.queue_depth
+                                  if opts.queue_depth >= 2 else 8)
+                    depth, ra = self.queue_tuner.suggest(
+                        seed_depth, opts.readahead_bytes)
+                    ropts.queue_depth = depth
+                    ropts.readahead_bytes = ra
                 degraded = (opts.backend == "process"
                             and getattr(opts, "_fallback_active", False))
                 if degraded:

@@ -68,6 +68,11 @@ class RecoveryMetrics:
     watchdog_kills: int = 0
     recovery_latency_s: float = 0.0
     degraded_mode: bool = False
+    # Direct-I/O tail accounting: sub-block fragments a direct-mode read had
+    # to finish through the buffered descriptor (the only legal buffered
+    # bytes in an O_DIRECT session — counted, never silent).
+    direct_tail_reads: int = 0
+    direct_tail_bytes: int = 0
     # FileSet sessions: re-issued bytes attributed to the shard whose file
     # they live in (splinters never span shards, so attribution is exact) —
     # proving a recovery re-read the RIGHT shard, not just the right amount.
@@ -78,6 +83,12 @@ class RecoveryMetrics:
             self.io_retries += 1
             if err is not None:
                 self.retried_errnos[err] = self.retried_errnos.get(err, 0) + 1
+
+    def record_direct_tail(self, nbytes: int = 0) -> None:
+        """One sub-block fragment of a direct read served buffered."""
+        with self.lock:
+            self.direct_tail_reads += 1
+            self.direct_tail_bytes += int(nbytes)
 
     def record_suppressed(self, err: Optional[int] = None) -> None:
         with self.lock:
@@ -139,6 +150,7 @@ class RecoveryMetrics:
                 other.watchdog_kills, other.recovery_latency_s,
                 other.degraded_mode,
                 dict(other.reissued_bytes_by_shard),
+                other.direct_tail_reads, other.direct_tail_bytes,
             )
         with self.lock:
             self.respawns += snap[0]
@@ -155,6 +167,8 @@ class RecoveryMetrics:
             self.recovery_latency_s += snap[10]
             self.degraded_mode = self.degraded_mode or snap[11]
             self._fold_shards(snap[12])
+            self.direct_tail_reads += snap[13]
+            self.direct_tail_bytes += snap[14]
 
     def summary(self) -> Dict[str, float]:
         with self.lock:
@@ -172,6 +186,8 @@ class RecoveryMetrics:
                 "recovery_latency_s": self.recovery_latency_s,
                 "degraded_mode": float(self.degraded_mode),
                 "shards_reissued": float(len(self.reissued_bytes_by_shard)),
+                "direct_tail_reads": float(self.direct_tail_reads),
+                "direct_tail_bytes": float(self.direct_tail_bytes),
             }
 
 
@@ -219,6 +235,16 @@ class SessionMetrics:
     # span shards, so every pread lands wholly in one shard file). Empty
     # for single-file sessions.
     shard_bytes: Dict[int, int] = field(default_factory=dict)
+    # Submission-layer config + observables for this session — what the
+    # QueueTuner consumes through the Director observer path. queue_depth 0
+    # means the blocking (synchronous) loop; submit_backend is the backend
+    # make_submitter actually chose ("io_uring"/"threads"/"" for blocking),
+    # so an auto-mode fallback is observable, never silent.
+    queue_depth: int = 0
+    readahead_bytes: int = 0
+    submit_backend: str = ""
+    direct_io: bool = False
+    inflight_hwm: int = 0
     _piece_seq: int = 0               # sampling counter (racy by design)
 
     def session_started(self, nbytes: int, num_readers: int) -> None:
@@ -226,6 +252,21 @@ class SessionMetrics:
             self.session_bytes = nbytes
             self.num_readers = num_readers
             self.t_start = time.perf_counter()
+
+    def record_submit_config(self, queue_depth: int, readahead_bytes: int,
+                             backend: str, direct_io: bool) -> None:
+        """The submission shape this session ran with (reader-set start)."""
+        with self.lock:
+            self.queue_depth = int(queue_depth)
+            self.readahead_bytes = int(readahead_bytes)
+            self.submit_backend = backend
+            self.direct_io = bool(direct_io)
+
+    def record_inflight_hwm(self, hwm: int) -> None:
+        """Fold one reader's in-flight high-water mark in (max across)."""
+        with self.lock:
+            if hwm > self.inflight_hwm:
+                self.inflight_hwm = hwm
 
     def record_read(self, reader: int, nbytes: int, dt: float) -> None:
         with self.lock:
@@ -332,6 +373,10 @@ class SessionMetrics:
             "requests": float(self.requests),
             "imbalance": self.imbalance(),
             "shards_read": float(len(self.shard_bytes)),
+            "queue_depth": float(self.queue_depth),
+            "readahead_bytes": float(self.readahead_bytes),
+            "inflight_hwm": float(self.inflight_hwm),
+            "direct_io": float(self.direct_io),
         }
 
 

@@ -86,6 +86,27 @@ class FileOptions:
     # delay_model / io_fault / ring_fault for any hook not set explicitly
     # (explicit hooks win). The deterministic-replay entry point.
     fault_plan: Optional[FaultPlan] = None
+    # -- cold-cache read engine (io/submit.py) -------------------------------
+    # Open the file(s) O_DIRECT: reads bypass the page cache and DMA
+    # straight into the arena. Requires block-aligned session offset, arena
+    # and (for FileSets) shard data regions — violations raise
+    # io.posix.DirectIOError at open/start, never silently fall back;
+    # sub-block tails go through the buffered fd, counted in
+    # RecoveryMetrics.direct_tail_reads.
+    direct_io: bool = False
+    # In-flight reads per reader: 0/1 = the blocking per-splinter loop;
+    # >= 2 = depth-managed async submission through io/submit.py.
+    queue_depth: int = 0
+    # WILLNEED window (bytes) advised ahead of the submission frontier
+    # (buffered files only — O_DIRECT bypasses the cache readahead).
+    readahead_bytes: int = 0
+    # Submission backend: "auto" (io_uring when the kernel/sandbox allows,
+    # else the preadv worker pool), or force "io_uring"/"threads".
+    submit_mode: str = "auto"
+    # When True, each session's (queue_depth, readahead_bytes) is chosen by
+    # the Director's QueueTuner from observed throughput; the explicit
+    # fields then only seed the first session.
+    adaptive_queue: bool = False
 
     def reader_options(self) -> ReaderOptions:
         if self.backend not in ("thread", "process"):
@@ -100,6 +121,16 @@ class FileOptions:
             raise ValueError(
                 f"unknown fallback backend {self.fallback_backend!r} "
                 f"(expected None or 'thread')")
+        if self.submit_mode not in ("auto", "io_uring", "threads"):
+            raise ValueError(
+                f"unknown submit mode {self.submit_mode!r} "
+                f"(expected 'auto', 'io_uring' or 'threads')")
+        if self.queue_depth < 0:
+            raise ValueError(
+                f"queue_depth must be >= 0, got {self.queue_depth}")
+        if self.readahead_bytes < 0:
+            raise ValueError(
+                f"readahead_bytes must be >= 0, got {self.readahead_bytes}")
         worker_fault = self.worker_fault
         delay_model = self.delay_model
         io_fault = self.io_fault
@@ -130,6 +161,10 @@ class FileOptions:
             topology=self.topology,
             numa_pin=self.numa_pin,
             prefault_arena=self.prefault_arena,
+            direct_io=self.direct_io,
+            queue_depth=self.queue_depth,
+            readahead_bytes=self.readahead_bytes,
+            submit_mode=self.submit_mode,
         )
 
 

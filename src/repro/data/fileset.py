@@ -241,9 +241,13 @@ class FileSet:
             (s.path, s.byte_start, HEADER_BYTES, s.data_bytes, s.index)
             for s in self.shards if s.data_bytes > 0)
 
-    def sharded_file(self) -> ShardedFile:
-        """Open one ``ShardedFile`` over the manifest's byte space."""
-        return ShardedFile(self.segments())
+    def sharded_file(self, *, direct_io: bool = False) -> ShardedFile:
+        """Open one ``ShardedFile`` over the manifest's byte space.
+
+        ``direct_io`` opens every shard O_DIRECT (io/posix.py: shard data
+        regions must sit on the filesystem block grid or this raises
+        ``DirectIOError`` naming the offenders — never a silent fallback)."""
+        return ShardedFile(self.segments(), direct_io=direct_io)
 
     def describe(self) -> str:
         return (f"fileset[{self.num_shards} shards, {self._total_rows} rows, "

@@ -139,6 +139,34 @@ consume executable once; the sizer EMA-smooths and 256 KiB-quantizes its
 suggestions so sizes converge after the first few sessions, but a
 latency-critical run should pin ``splinter_bytes`` statically.
 
+Cold-cache reads (``direct_io`` / ``queue_depth`` — io/submit.py)
+-----------------------------------------------------------------
+First-epoch corpora are COLD: nothing below survives in the page cache,
+and the blocking one-pread-per-splinter loop leaves the device idle
+between requests. Two ``FileOptions`` knobs change the read engine under
+this pipeline without touching any delivery contract above:
+
+  * ``queue_depth >= 2`` keeps that many splinter reads in flight per
+    reader (io_uring where the kernel allows, else a preadv pool with
+    WILLNEED pipelining; ``readahead_bytes`` advises ahead of the
+    submission frontier). Splinters complete — and stream, under
+    ``streaming=True`` — in completion order, which the event-driven
+    staging path was built for; borrowed views, bit-identity, retry
+    accounting and fault hooks are unchanged.
+  * ``direct_io=True`` opens the corpus O_DIRECT: reads DMA straight into
+    the session arena, bypassing the page cache (the right mode when the
+    corpus is read once and would only pollute it). The contract is
+    *fail-fast, never fall back silently*: session windows, splinter grid
+    and arena must sit on the probed FS block grid (the Director plans
+    with ``align=block_size`` automatically; odd session offsets raise
+    ``DirectIOError`` at start), sub-block tails go through the buffered
+    fd and are counted (``RecoveryMetrics.direct_tail_reads``), and a
+    FileSet needs block-aligned shard data regions — an odd-sized
+    interior shard is rejected at open, by name.
+``adaptive_queue=True`` hands both knobs to the Director's QueueTuner
+(core/autotune.py), which hill-climbs (depth, readahead) from observed
+session throughput across steps; the explicit fields seed session one.
+
 Topology-aware reader runtime (``FileOptions.topology`` / ``numa_pin``)
 -----------------------------------------------------------------------
 Passing a ``core.placement.Topology`` in ``file_opts`` turns on the NUMA

@@ -25,9 +25,42 @@ hook (``(offset, nbytes) -> Optional[int]``, may raise ``OSError``) before
 each syscall — the deterministic short-read / flaky-EIO injection point
 used by ``core/faults.py`` (picklable, so it also ships to reader worker
 processes through ``WorkerSpec.io_fault``).
+
+Direct I/O mode (the cold-cache contract)
+-----------------------------------------
+``PosixFile.open(path, direct_io=True)`` opens a second ``O_DIRECT``
+descriptor next to the buffered one. Direct reads bypass the page cache
+entirely — the kernel DMAs straight into the session arena — which is the
+honest way to measure (and serve) the storage path the paper targets:
+``drop_page_cache``-based eviction is advisory, but an O_DIRECT read can
+never be satisfied from DRAM in the first place.
+
+The price is alignment: file offset, request length, and the destination
+buffer address must all be multiples of the filesystem block size (probed
+per path via :func:`fs_block_size` — ``os.statvfs``, falling back to
+:data:`DEFAULT_ALIGN`). The splinter grid already provides aligned offsets
+(``aligned_floor`` over the probed block size) and NumPy/shm arenas are
+page-aligned, so the steady-state read path satisfies this for free. The
+two legal violations are handled, **counted, never silent**:
+
+* a *tail* shorter than one block (end of a stripe/file) is read through
+  the buffered descriptor and counted via ``record_direct_tail`` on the
+  stats sink (falling back to :data:`IO_EVENTS`);
+* anything structurally misaligned (arena base, session offset, shard
+  ``file_base``) raises :class:`DirectIOError` with a descriptive message
+  at open/start time — there is no silent fallback to buffered mode.
+
+When to expect O_DIRECT to *lose*: warm-cache re-reads (buffered reads are
+DRAM copies), tiny requests (per-request DMA setup dominates), and FSes
+where the kernel's own readahead pipelines better than the submitted queue
+depth. It wins on genuinely cold data, on memory-pressured nodes (no cache
+pollution: a training epoch's worth of token shards never evicts the
+model's pages), and wherever tail latency from page-cache writeback
+interference matters.
 """
 from __future__ import annotations
 
+import ctypes
 import errno
 import os
 import threading
@@ -38,6 +71,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 # Typical FS block size; stripe/splinter boundaries are aligned to this when
 # possible to avoid read-modify-write amplification on the storage side.
+# Prefer :func:`fs_block_size` (statvfs probe) wherever a path is in hand —
+# this constant is only the probe's fallback and the no-path default.
 DEFAULT_ALIGN = 4096
 
 
@@ -48,6 +83,49 @@ def aligned_floor(nbytes: int, align: int = DEFAULT_ALIGN) -> int:
     through this floor (a sub-block size would put read offsets off the FS
     block grid and re-introduce read-modify-write amplification)."""
     return max(align, (nbytes // align) * align)
+
+
+def fs_block_size(path: str, fallback: int = DEFAULT_ALIGN) -> int:
+    """Probe the filesystem block size backing ``path`` via ``os.statvfs``.
+
+    Returns ``f_bsize`` (the preferred I/O block size — this is also the
+    O_DIRECT alignment requirement on Linux for every mainstream FS) when it
+    is a sane power of two in ``[512, 1 MiB]``; otherwise ``fallback``.
+    A missing path is probed through its parent directory so callers can
+    plan before the file exists."""
+    p = path
+    for _ in range(2):
+        try:
+            bs = int(os.statvfs(p).f_bsize)
+            if 512 <= bs <= (1 << 20) and (bs & (bs - 1)) == 0:
+                return bs
+            return fallback
+        except (OSError, AttributeError):
+            p = os.path.dirname(p) or "."
+    return fallback
+
+
+class DirectIOError(OSError):
+    """Raised when ``direct_io=True`` cannot be honoured.
+
+    Deliberately an error, not a warning: the direct-I/O contract is
+    "runs end-to-end or fails fast with the reason" — a silent fallback to
+    buffered reads would report cold-cache numbers that are really DRAM."""
+
+
+def _buf_addr(view: memoryview) -> int:
+    """Virtual address of a writable buffer (for O_DIRECT alignment checks)."""
+    return ctypes.addressof(ctypes.c_char.from_buffer(view))
+
+
+def supports_direct_io(path: str) -> bool:
+    """True when ``path``'s filesystem accepts ``O_DIRECT`` opens."""
+    try:
+        fd = os.open(path, os.O_RDONLY | os.O_DIRECT)
+    except (OSError, AttributeError):
+        return False
+    os.close(fd)
+    return True
 
 # os.preadv reads straight into a caller-provided buffer (no intermediate
 # bytes object); available on Linux/BSD since Python 3.7. When absent we fall
@@ -99,6 +177,8 @@ class IOEventCounts:
         self._lock = threading.Lock()
         self.retries = 0
         self.suppressed = 0
+        self.direct_tail_reads = 0
+        self.direct_tail_bytes = 0
         self.by_errno: Dict[int, int] = {}
 
     def record_io_retry(self, err: Optional[int] = None) -> None:
@@ -112,6 +192,11 @@ class IOEventCounts:
             self.suppressed += 1
             if err is not None:
                 self.by_errno[err] = self.by_errno.get(err, 0) + 1
+
+    def record_direct_tail(self, nbytes: int = 0) -> None:
+        with self._lock:
+            self.direct_tail_reads += 1
+            self.direct_tail_bytes += int(nbytes)
 
 
 IO_EVENTS = IOEventCounts()
@@ -160,14 +245,44 @@ class PosixFile:
     # Per-call ``fault=`` overrides this; reader workers set it from
     # ``WorkerSpec.io_fault`` (core/faults.py hooks are picklable).
     fault: Optional[object] = None
+    # Direct-I/O mode: ``direct_fd`` is the O_DIRECT descriptor (body reads),
+    # ``fd`` stays buffered (sub-block tails, advisory hints). ``block_size``
+    # is the probed alignment every direct read must honour.
+    direct_io: bool = False
+    direct_fd: int = -1
+    block_size: int = DEFAULT_ALIGN
     _refcount: int = 0
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     @classmethod
-    def open(cls, path: str) -> "PosixFile":
+    def open(cls, path: str, *, direct_io: bool = False) -> "PosixFile":
         fd = os.open(path, os.O_RDONLY)
         size = os.fstat(fd).st_size
-        f = cls(path=path, fd=fd, size=size)
+        bs = fs_block_size(path)
+        direct_fd = -1
+        if direct_io:
+            if not HAVE_PREADV:
+                os.close(fd)
+                raise DirectIOError(
+                    f"direct_io=True needs os.preadv (read straight into an "
+                    f"aligned arena view); this platform lacks it — cannot "
+                    f"open {path!r} in direct mode")
+            flag = getattr(os, "O_DIRECT", 0)
+            if not flag:
+                os.close(fd)
+                raise DirectIOError(
+                    f"direct_io=True: os.O_DIRECT is not available on this "
+                    f"platform — cannot open {path!r} in direct mode")
+            try:
+                direct_fd = os.open(path, os.O_RDONLY | flag)
+            except OSError as e:
+                os.close(fd)
+                raise DirectIOError(
+                    f"direct_io=True: O_DIRECT open of {path!r} failed with "
+                    f"errno {e.errno} ({os.strerror(e.errno or 0)}) — the "
+                    f"filesystem does not support direct I/O") from e
+        f = cls(path=path, fd=fd, size=size, direct_io=direct_io,
+                direct_fd=direct_fd, block_size=bs)
         f._refcount = 1
         return f
 
@@ -215,6 +330,14 @@ class PosixFile:
         ``fault`` (default ``self.fault``) is the injection hook — it may
         cap a syscall's length (short read) or raise ``OSError`` (which
         then flows through the same retry machinery a real error would).
+
+        Direct mode: the aligned body of the request goes through the
+        O_DIRECT descriptor; any sub-block fragment (a tail shorter than
+        one block, or a grid re-sync after an injected/EOF short read)
+        goes through the buffered descriptor and is counted via
+        ``record_direct_tail`` on the stats sink. A structurally
+        misaligned call (offset or buffer address off the probed block
+        grid) raises :class:`DirectIOError` — never a silent fallback.
         """
         want = len(view)
         total = 0
@@ -222,8 +345,24 @@ class PosixFile:
         hook = fault if fault is not None else self.fault
         pol = self.retry
         use_v = self.use_preadv and HAVE_PREADV
+        direct = self.direct_io and self.direct_fd >= 0
+        bs = self.block_size
+        if direct and want > 0:
+            if offset % bs:
+                raise DirectIOError(
+                    f"direct read at offset {offset} is off the {bs}-byte "
+                    f"block grid of {self.path!r} (offset % {bs} == "
+                    f"{offset % bs}); plan splinters with "
+                    f"align=fs_block_size(path)")
+            addr = _buf_addr(view)
+            if addr % bs:
+                raise DirectIOError(
+                    f"direct read destination buffer at 0x{addr:x} is not "
+                    f"{bs}-byte aligned for {self.path!r}; the session "
+                    f"arena must be allocated on the block grid")
         while total < want:
             attempts, pause, deadline = 0, pol.base_backoff_s, None
+            tail_frag = False
             while True:
                 cap = want - total
                 try:
@@ -231,7 +370,24 @@ class PosixFile:
                         c = hook(offset + total, cap)
                         if c is not None:
                             cap = max(1, min(cap, int(c)))
-                    if use_v:
+                    pos = offset + total
+                    tail_frag = False
+                    if direct and pos % bs == 0 and cap >= bs:
+                        # Aligned body — DMA straight into the arena view.
+                        dcap = (cap // bs) * bs
+                        got = os.preadv(
+                            self.direct_fd, [view[total: total + dcap]], pos
+                        )
+                    elif direct:
+                        # Sub-block fragment (tail, or re-sync to the grid
+                        # after a short return) — buffered fd, counted.
+                        frag = pos % bs
+                        bcap = min(cap, bs - frag) if frag else cap
+                        got = os.preadv(
+                            self.fd, [view[total: total + bcap]], pos
+                        )
+                        tail_frag = True
+                    elif use_v:
                         got = os.preadv(
                             self.fd, [view[total: total + cap]], offset + total
                         )
@@ -257,6 +413,9 @@ class PosixFile:
                     pause = min(pause * 2.0, pol.max_backoff_s)
             if got <= 0:              # EOF (preadv never returns <0 in py)
                 break
+            if tail_frag:
+                rec = getattr(sink, "record_direct_tail", None)
+                (rec if rec is not None else IO_EVENTS.record_direct_tail)(got)
             total += got
         return total
 
@@ -293,6 +452,9 @@ class PosixFile:
             if self._refcount <= 0 and self.fd >= 0:
                 os.close(self.fd)
                 self.fd = -1
+                if self.direct_fd >= 0:
+                    os.close(self.direct_fd)
+                    self.direct_fd = -1
 
     @property
     def closed(self) -> bool:
@@ -328,7 +490,8 @@ class ShardedFile:
     ``core/faults.py`` deterministic.
     """
 
-    def __init__(self, segments: Sequence[Tuple[str, int, int, int, int]]):
+    def __init__(self, segments: Sequence[Tuple[str, int, int, int, int]],
+                 *, direct_io: bool = False):
         segs = tuple(
             (str(p), int(g), int(b), int(n), int(sid))
             for (p, g, b, n, sid) in segments
@@ -349,6 +512,7 @@ class ShardedFile:
         self.path = (f"fileset[{len(segs)} shards: {segs[0][0]} .. "
                      f"{segs[-1][0]}]")
         self.fault: Optional[object] = None
+        self.direct_io = bool(direct_io)
         self._lock = threading.Lock()
         self._refcount = 1
         # One descriptor per unique path (a path may legally back several
@@ -357,17 +521,39 @@ class ShardedFile:
         try:
             for p, *_ in segs:
                 if p not in self._by_path:
-                    self._by_path[p] = PosixFile.open(p)
+                    self._by_path[p] = PosixFile.open(p, direct_io=direct_io)
         except OSError:
             for f in self._by_path.values():
                 f.close()
             raise
         self._files = tuple(self._by_path[p] for (p, *_ ) in segs)
+        self.block_size = max(f.block_size for f in self._by_path.values())
+        if direct_io:
+            # A shard whose data region starts off the block grid would put
+            # every global-aligned read at an unaligned file offset — reject
+            # up front with the offender list, per the direct-I/O contract.
+            bad = [(p, "file_base", b) for (p, g, b, n, sid) in segs
+                   if b % self._by_path[p].block_size]
+            # Interior shard starts become hard stripe bounds; if one is off
+            # the grid, every splinter of that shard lands at an unaligned
+            # arena position (buffer-address check would fail at read time).
+            bad += [(p, "global_start", g) for (p, g, b, n, sid) in segs[1:]
+                    if g % self.block_size]
+            if bad:
+                for f in self._by_path.values():
+                    f.close()
+                raise DirectIOError(
+                    f"direct_io=True: {len(bad)} shard segment field(s) off "
+                    f"the block grid (first: {bad[0][0]!r} {bad[0][1]}="
+                    f"{bad[0][2]}); direct sharded sessions need "
+                    f"block-aligned shard data regions and block-multiple "
+                    f"shard sizes")
 
     @classmethod
-    def from_segments(cls, segments) -> "ShardedFile":
+    def from_segments(cls, segments, *, direct_io: bool = False
+                      ) -> "ShardedFile":
         """Rebuild from a pickled segment table (worker-process side)."""
-        return cls(segments)
+        return cls(segments, direct_io=direct_io)
 
     @property
     def worker_segments(self) -> Tuple[Tuple[str, int, int, int, int], ...]:
@@ -494,6 +680,14 @@ def drop_page_cache(path: str, *, stats=None) -> bool:
             return False
         raise
     try:
+        try:
+            # DONTNEED cannot evict DIRTY pages — a file written moments
+            # ago (every benchmark fixture) would silently stay resident.
+            # fsync on a read-only fd is legal on Linux and flushes the
+            # inode's dirty pages first; failure is advisory, not fatal.
+            os.fsync(fd)
+        except OSError as e:
+            sink.record_suppressed(e.errno)
         try:
             fadvise(fd, 0, 0, os.POSIX_FADV_DONTNEED)
         except OSError as e:

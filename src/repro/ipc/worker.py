@@ -43,6 +43,7 @@ from typing import Optional, Tuple
 from repro.io.layout import Splinter
 from repro.io.numa import first_touch, pin_thread_to_cpus
 from repro.io.posix import PosixFile, ShardedFile
+from repro.io.submit import AsyncReadEngine
 from repro.ipc.ring import (
     PIN_FAILED,
     PIN_NONE,
@@ -97,6 +98,14 @@ class WorkerSpec:
     # inherited — the same fd-hygiene contract as file_path); splinter
     # offsets are then global data-space bytes. None = single-file session.
     shards: Optional[Tuple[Tuple[str, int, int, int, int], ...]] = None
+    # Cold-cache read engine (io/submit.py): the worker opens its own fds
+    # with O_DIRECT when direct_io, and drains with queue_depth reads in
+    # flight (0/1 = the blocking loop above) through submit_mode, advising
+    # readahead_bytes ahead of the submission frontier.
+    direct_io: bool = False
+    queue_depth: int = 0
+    readahead_bytes: int = 0
+    submit_mode: str = "auto"
 
 
 def worker_main(spec: WorkerSpec) -> None:
@@ -144,11 +153,17 @@ def worker_main(spec: WorkerSpec) -> None:
             ring.set_state(ST_DONE)
             return
         if spec.shards is not None:          # FileSet: own fd per shard
-            f = ShardedFile.from_segments(spec.shards)
-        else:
-            f = PosixFile.open(spec.file_path)   # own fd — never inherited
+            f = ShardedFile.from_segments(spec.shards,
+                                          direct_io=spec.direct_io)
+        else:                                # own fd — never inherited
+            f = PosixFile.open(spec.file_path, direct_io=spec.direct_io)
         f.fault = spec.io_fault
         try:
+            if spec.queue_depth >= 2:        # depth-managed async drain
+                _drain_async(spec, f, arr, ring, io, orphaned)
+                ring.set_io(io.retries, io.suppressed)
+                ring.set_state(ST_DONE)
+                return
             for sp in spec.splinters:
                 if ring.stop_requested():    # graceful drain request
                     break
@@ -188,6 +203,65 @@ def worker_main(spec: WorkerSpec) -> None:
         ring.set_io(io.retries, io.suppressed)
         ring.set_error(f"{type(e).__name__}: {e}")
         raise SystemExit(1)
+
+
+def _drain_async(spec: WorkerSpec, f, arr, ring: EventRing,
+                 io: "_IOCounters", orphaned) -> None:
+    """Depth-managed drain (``queue_depth >= 2``): the worker-process twin
+    of the thread backend's async reader loop. Splinters are submitted
+    through :class:`AsyncReadEngine` (io_uring or the preadv pool) with up
+    to ``spec.queue_depth`` in flight; completions publish the same ring
+    events as the blocking loop, in completion (not stripe) order — the
+    supervisor's ``_mark_done`` fan-out is order-agnostic. A stop request,
+    orphaning, or a full-ring publish loss flips ``stopped`` so the engine
+    drains what is in flight without submitting more."""
+    base = spec.base_offset
+    it = iter(spec.splinters)
+    stopped = [False]
+
+    def stop() -> bool:
+        return stopped[0]
+
+    def next_item():
+        if stopped[0] or ring.stop_requested() or orphaned():
+            stopped[0] = True
+            return None
+        sp = next(it, None)
+        if sp is None:
+            return None
+        if spec.fault is not None:           # crash/raise hook at submission
+            spec.fault(sp.reader, sp.index)
+        lo = sp.offset - base
+        return sp, sp.offset, memoryview(arr)[lo: lo + sp.nbytes]
+
+    delay = None
+    if spec.delay_model is not None:
+        dm = spec.delay_model
+
+        def delay(sp, nbytes):               # runs on the submitter's clock
+            d = dm(sp.reader, sp)
+            if d > 0:
+                time.sleep(d)
+
+    def on_complete(sp: Splinter, n: int, dt: float) -> None:
+        if n != sp.nbytes:
+            raise IOError(
+                f"short read: wanted {sp.nbytes} at {sp.offset}, got {n}")
+        # Refresh the header counters per splinter (crash-tolerant tallies,
+        # same contract as the blocking loop).
+        ring.set_io(io.retries, io.suppressed)
+        published = ring.publish(RingEvent(
+            index=sp.index, reader=sp.reader, offset=sp.offset,
+            nbytes=sp.nbytes, arena_off=sp.offset - base,
+            t_arrival=time.perf_counter(), read_dt=dt,
+        ), should_abort=orphaned)
+        if not published:                    # stop/orphan won the backoff
+            stopped[0] = True
+
+    eng = AsyncReadEngine(
+        f, spec.queue_depth, readahead_bytes=spec.readahead_bytes,
+        mode=spec.submit_mode, stats=io, fault=spec.io_fault, delay=delay)
+    eng.run(next_item, on_complete, stop=stop)
 
 
 class _IOCounters:

@@ -14,6 +14,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 
 import jax
@@ -105,7 +106,51 @@ def main() -> None:
                          " (core/autotune.py SplinterSizer); with"
                          " --streaming each size change retraces the fused"
                          " ingest once until the EMA converges")
+    ap.add_argument("--tuned-env", action="store_true",
+                    help="re-exec this driver through scripts/env.sh first"
+                         " (tcmalloc LD_PRELOAD when the host ships it,"
+                         " quiet TF/XLA logging, single intra-op XLA"
+                         " thread); every knob degrades silently, so this"
+                         " is safe on any host")
+    ap.add_argument("--direct-io", action="store_true",
+                    help="open the corpus O_DIRECT: reads bypass the page"
+                         " cache and DMA into the session arena (cold-cache"
+                         " read engine, io/submit.py). Misaligned windows"
+                         " fail fast with a DirectIOError — never a silent"
+                         " buffered fallback")
+    ap.add_argument("--queue-depth", type=int, default=0,
+                    help="in-flight splinter reads per reader: 0/1 = the"
+                         " blocking loop, >= 2 = depth-managed async"
+                         " submission (io_uring when available, else a"
+                         " preadv pool)")
+    ap.add_argument("--readahead-mb", type=int, default=0,
+                    help="WILLNEED window (MB) advised ahead of the async"
+                         " submission frontier (buffered files only)")
+    ap.add_argument("--submit-mode", default="auto",
+                    choices=["auto", "io_uring", "threads"],
+                    help="async submission backend selection")
+    ap.add_argument("--adaptive-queue", action="store_true",
+                    help="let the Director's QueueTuner pick (queue-depth,"
+                         " readahead) per session from observed throughput;"
+                         " the explicit flags then only seed the first"
+                         " session")
     args = ap.parse_args()
+    if args.tuned_env and not os.environ.get("CKIO_TUNED_ENV"):
+        # Re-exec through the env script so LD_PRELOAD (allocator) and
+        # XLA_FLAGS exist before the interpreter and jax start. env.sh
+        # exports CKIO_TUNED_ENV=1, which breaks the exec loop.
+        root = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                            "..", "..", ".."))
+        env_sh = os.path.join(root, "scripts", "env.sh")
+        if os.path.exists(env_sh):
+            argv = [sys.executable, "-m", "repro.launch.train",
+                    *sys.argv[1:]]
+            refs = " ".join(
+                ['"$0"'] + [f'"${{{i}}}"' for i in range(1, len(argv))])
+            os.execvp("bash", [
+                "bash", "-c", f'source "{env_sh}" && exec {refs}', *argv])
+        print(f"--tuned-env: {env_sh} not found; continuing untuned",
+              file=sys.stderr)
     if args.numa_pin and not args.topology:
         ap.error("--numa-pin requires --topology (the topology supplies "
                  "the domain->CPU map; without it nothing would be pinned)")
@@ -155,7 +200,12 @@ def main() -> None:
                               prefault_arena=(topology is not None
                                               or args.backend == "process"),
                               backend=args.backend,
-                              max_workers=args.max_workers),
+                              max_workers=args.max_workers,
+                              direct_io=args.direct_io,
+                              queue_depth=args.queue_depth,
+                              readahead_bytes=args.readahead_mb * (1 << 20),
+                              submit_mode=args.submit_mode,
+                              adaptive_queue=args.adaptive_queue),
         streaming=args.streaming,
     )
 

@@ -1,0 +1,331 @@
+"""Cold-cache read engine tests: io/submit.py depth-managed submission,
+O_DIRECT alignment contracts, backend selection, and fault survival.
+
+The invariants under test (see the io/submit.py and io/posix.py module
+docstrings for the contracts):
+
+* queue depth is a hard ceiling — a submitter never holds more than
+  ``depth`` reads in flight, and close() drains to zero;
+* backend selection is explicit and inspectable — io_uring only for plain
+  files without a delay model, descriptive ValueError when forced wrongly,
+  ``CKIO_NO_IOURING`` forces the preadv pool;
+* O_DIRECT never silently falls back — misaligned offsets/buffers/shards
+  raise ``DirectIOError`` naming the violation; legal sub-block tails go
+  through the buffered fd and are counted;
+* every mode x backend combination drains bit-identically with zero
+  copies;
+* the PR-6 fault hooks (FlakyEIO / ShortRead) survive under async
+  submission with retries counted in RecoveryMetrics.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.api import CkIO
+from repro.core.buffers import BufferReaderSet, ReaderOptions
+from repro.core.faults import ComposedIOFault, FlakyEIO, ShortRead
+from repro.core.scheduler import TaskScheduler
+from repro.core.session import FileOptions
+from repro.io.layout import plan_session
+from repro.io.posix import DirectIOError, PosixFile, ShardedFile, fs_block_size
+from repro.io.submit import (
+    AsyncReadEngine,
+    ThreadPoolSubmitter,
+    io_uring_supported,
+    make_submitter,
+)
+
+SEED = 20260809
+
+
+@pytest.fixture
+def blob(tmp_path):
+    rng = np.random.default_rng(SEED)
+    # Deliberately NOT a block multiple: the last splinter's tail is
+    # shorter than an FS block (the O_DIRECT edge case).
+    data = rng.integers(0, 256, 2 * 1024 * 1024 + 777,
+                        dtype=np.uint8).tobytes()
+    path = str(tmp_path / "submit_blob.bin")
+    with open(path, "wb") as f:
+        f.write(data)
+    return path, data
+
+
+def _items(data_len, chunk, arena):
+    """Simple splinter source over [0, data_len) into ``arena``."""
+    out = []
+    pos = 0
+    i = 0
+    while pos < data_len:
+        n = min(chunk, data_len - pos)
+        out.append((i, pos, memoryview(arena)[pos: pos + n]))
+        pos += n
+        i += 1
+    return out
+
+
+# -- queue-depth invariants ----------------------------------------------------
+@pytest.mark.parametrize("mode", ["threads", "auto"])
+def test_depth_is_a_hard_ceiling(blob, mode):
+    path, data = blob
+    f = PosixFile.open(path)
+    try:
+        arena = np.empty(len(data), dtype=np.uint8)
+        eng = AsyncReadEngine(f, 4, mode=mode)
+        items = iter(_items(len(data), 128 * 1024, arena))
+        got = {}
+
+        def on_complete(token, n, dt):
+            got[token] = n
+            # live check, not just the high-water mark afterwards
+            assert eng.sub.inflight() <= 4
+
+        done = eng.run(lambda: next(items, None), on_complete)
+        assert done == len(got) == (len(data) + 128 * 1024 - 1) // (128 * 1024)
+        assert 1 <= eng.max_inflight <= 4
+        assert arena.tobytes() == data
+    finally:
+        f.close()
+
+
+def test_depth_violation_is_an_error(blob):
+    path, data = blob
+    f = PosixFile.open(path)
+    try:
+        arena = np.empty(4096 * 3, dtype=np.uint8)
+        sub = ThreadPoolSubmitter(f, 2)
+        try:
+            sub.submit(0, 0, memoryview(arena)[0:4096])
+            sub.submit(1, 4096, memoryview(arena)[4096:8192])
+            assert not sub.can_submit()
+            with pytest.raises(RuntimeError, match="depth"):
+                sub.submit(2, 8192, memoryview(arena)[8192:12288])
+        finally:
+            sub.close(drain=True)
+        assert sub.inflight() == 0          # drained on close
+    finally:
+        f.close()
+
+
+def test_stop_drains_inflight(blob):
+    path, data = blob
+    f = PosixFile.open(path)
+    try:
+        arena = np.empty(len(data), dtype=np.uint8)
+        eng = AsyncReadEngine(f, 4, mode="threads")
+        items = iter(_items(len(data), 64 * 1024, arena))
+        done = eng.run(lambda: next(items, None), lambda *a: None,
+                       stop=lambda: True)
+        assert done == 0                    # stopped before any delivery
+        assert eng.sub.inflight() == 0      # nothing left in flight
+    finally:
+        f.close()
+
+
+# -- backend selection ---------------------------------------------------------
+def test_auto_selection_and_forced_io_uring_errors(blob, tmp_path,
+                                                   monkeypatch):
+    path, data = blob
+    f = PosixFile.open(path)
+    try:
+        sub = make_submitter(f, 2, mode="auto")
+        assert sub.kind == ("io_uring" if io_uring_supported() else "threads")
+        sub.close()
+        # a delay model forces the pool (the modeled-PFS sleep must run
+        # per-read on a thread; the ring has nowhere to run it)
+        sub = make_submitter(f, 2, mode="auto", delay=lambda t, n: None)
+        assert sub.kind == "threads"
+        sub.close()
+        with pytest.raises(ValueError, match="delay"):
+            make_submitter(f, 2, mode="io_uring", delay=lambda t, n: None)
+        # env kill-switch wins over the kernel probe
+        monkeypatch.setenv("CKIO_NO_IOURING", "1")
+        assert not io_uring_supported()
+        sub = make_submitter(f, 2, mode="auto")
+        assert sub.kind == "threads"
+        sub.close()
+        with pytest.raises(ValueError, match="io_uring"):
+            make_submitter(f, 2, mode="io_uring")
+    finally:
+        f.close()
+    # sharded files never ride the ring directly
+    half = len(data) // 2
+    p2 = str(tmp_path / "s2.bin")
+    with open(p2, "wb") as fh:
+        fh.write(data[half:])
+    sf = ShardedFile([(path, 0, 0, half, 0), (p2, half, 0, len(data) - half,
+                                              1)])
+    try:
+        monkeypatch.delenv("CKIO_NO_IOURING", raising=False)
+        sub = make_submitter(sf, 2, mode="auto")
+        assert sub.kind == "threads"
+        sub.close()
+        with pytest.raises(ValueError, match="[Ss]harded"):
+            make_submitter(sf, 2, mode="io_uring")
+    finally:
+        sf.close()
+
+
+# -- O_DIRECT alignment contracts ----------------------------------------------
+def test_direct_tail_shorter_than_block(blob):
+    path, data = blob
+    f = PosixFile.open(path, direct_io=True)
+    try:
+        bs = f.block_size
+        assert len(data) % bs != 0          # fixture guarantees a tail
+        raw = np.empty(len(data) + bs, dtype=np.uint8)
+        skew = (-raw.ctypes.data) % bs
+        arena = raw[skew: skew + len(data)]
+
+        class Sink:
+            tails = retries = 0
+
+            def record_direct_tail(self, n=0):
+                Sink.tails += 1
+
+            def record_io_retry(self, err=None):
+                Sink.retries += 1
+
+        n = f.pread_into(0, memoryview(arena), stats=Sink())
+        assert n == len(data)
+        assert arena.tobytes() == data
+        assert Sink.tails >= 1              # the sub-block tail was counted
+    finally:
+        f.close()
+
+
+def test_direct_rejects_misalignment(blob, tmp_path):
+    path, data = blob
+    f = PosixFile.open(path, direct_io=True)
+    try:
+        bs = f.block_size
+        raw = np.empty(bs * 2, dtype=np.uint8)
+        skew = (-raw.ctypes.data) % bs
+        aligned = raw[skew: skew + bs]
+        with pytest.raises(DirectIOError, match="offset"):
+            f.pread_into(1, memoryview(aligned))         # unaligned offset
+        with pytest.raises(DirectIOError, match="buffer"):
+            f.pread_into(0, memoryview(raw[skew + 1: skew + 1 + bs]))
+    finally:
+        f.close()
+    # sharded: a shard whose data region starts off-grid is rejected at
+    # open — with the offending segment named
+    p2 = str(tmp_path / "shard2.bin")
+    with open(p2, "wb") as fh:
+        fh.write(data)
+    bs = fs_block_size(path)
+    with pytest.raises(DirectIOError, match="file_base"):
+        ShardedFile([(path, 0, 100, len(data) - 100, 0)], direct_io=True)
+    # an odd-sized INTERIOR shard puts every later shard's global start (and
+    # with it that shard's arena positions) off the grid — rejected up front
+    with pytest.raises(DirectIOError, match="global_start"):
+        ShardedFile([(path, 0, 0, bs + 1, 0), (p2, bs + 1, 0, bs, 1)],
+                    direct_io=True)
+
+
+def test_direct_session_plan_misalignment_fails_fast(blob):
+    """A direct session whose window sits off the block grid must fail at
+    start() with a descriptive DirectIOError — never silently go buffered."""
+    path, data = blob
+    f = PosixFile.open(path, direct_io=True)
+    sched = TaskScheduler(num_pes=2)
+    try:
+        plan = plan_session(100, 64 * 1024, 1, splinter_bytes=32 * 1024)
+        rs = BufferReaderSet(f, plan, sched, [0],
+                             ReaderOptions(splinter_bytes=32 * 1024,
+                                           direct_io=True))
+        with pytest.raises(DirectIOError, match="offset"):
+            rs.start()
+    finally:
+        f.close()
+
+
+# -- bit-identity matrix -------------------------------------------------------
+def _drain(path, nbytes, opts):
+    ck = CkIO(num_pes=2)
+    fh = ck.open_sync(path, opts)
+    sess = ck.start_read_session_sync(fh, nbytes, 0)
+    assert sess.readers.join(180)
+    out = bytes(ck.read_view_sync(sess, nbytes, 0))
+    m = sess.metrics
+    stats = dict(copied=m.bytes_copied, backend=m.submit_backend,
+                 direct=m.direct_io, hwm=m.inflight_hwm,
+                 retries=m.recovery.io_retries
+                 + m.recovery.worker_io_retries)
+    ck.close_read_session_sync(sess)
+    ck.close_sync(fh)
+    return out, stats
+
+
+@pytest.mark.parametrize("name,opts", [
+    ("blocking", dict()),
+    ("async_threads", dict(queue_depth=4, submit_mode="threads",
+                           readahead_bytes=1 << 20)),
+    ("async_auto", dict(queue_depth=4)),
+    ("direct_async", dict(queue_depth=4, direct_io=True)),
+    ("direct_blocking", dict(direct_io=True)),
+])
+def test_bit_identity_thread_backend(blob, name, opts):
+    path, data = blob
+    sha = hashlib.sha256(data).hexdigest()
+    out, stats = _drain(path, len(data), FileOptions(
+        num_readers=2, splinter_bytes=256 * 1024, **opts))
+    assert hashlib.sha256(out).hexdigest() == sha, name
+    assert stats["copied"] == 0
+    if opts.get("queue_depth", 0) >= 2:
+        assert stats["backend"] in ("io_uring", "threads")
+        assert 1 <= stats["hwm"] <= 4
+    if opts.get("direct_io"):
+        assert stats["direct"]
+
+
+@pytest.mark.parametrize("name,opts", [
+    ("async", dict(queue_depth=4)),
+    ("direct_async", dict(queue_depth=4, direct_io=True)),
+])
+def test_bit_identity_process_backend(blob, name, opts):
+    path, data = blob
+    sha = hashlib.sha256(data).hexdigest()
+    out, stats = _drain(path, len(data), FileOptions(
+        num_readers=2, splinter_bytes=256 * 1024, backend="process",
+        max_workers=2, **opts))
+    assert hashlib.sha256(out).hexdigest() == sha, name
+    assert stats["copied"] == 0
+
+
+# -- faults under async submission ---------------------------------------------
+def test_flaky_eio_retried_under_async(blob):
+    path, data = blob
+    sha = hashlib.sha256(data).hexdigest()
+    out, stats = _drain(path, len(data), FileOptions(
+        num_readers=2, splinter_bytes=128 * 1024, queue_depth=4,
+        io_fault=FlakyEIO(every=5)))
+    assert hashlib.sha256(out).hexdigest() == sha
+    assert stats["copied"] == 0
+    assert stats["retries"] > 0             # absorbed, counted, survived
+
+
+def test_short_reads_resumed_under_async(blob):
+    path, data = blob
+    sha = hashlib.sha256(data).hexdigest()
+    out, stats = _drain(path, len(data), FileOptions(
+        num_readers=2, splinter_bytes=128 * 1024, queue_depth=4,
+        submit_mode="threads",
+        io_fault=ComposedIOFault((ShortRead(every=2, max_bytes=16 * 1024),
+                                  FlakyEIO(every=9)))))
+    assert hashlib.sha256(out).hexdigest() == sha
+    assert stats["copied"] == 0
+    assert stats["retries"] > 0
+
+
+def test_options_validation():
+    with pytest.raises(ValueError, match="submit mode"):
+        FileOptions(submit_mode="sidecar").reader_options()
+    with pytest.raises(ValueError, match="queue_depth"):
+        FileOptions(queue_depth=-1).reader_options()
+    with pytest.raises(ValueError, match="readahead"):
+        FileOptions(readahead_bytes=-4096).reader_options()
