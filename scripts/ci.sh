@@ -37,6 +37,13 @@
 #                                            sharding stages 1x the window
 #                                            balanced across devices, legacy
 #                                            per-call fallback ~2x)
+#   benchmarks/perf_service.py --quick       persistent reader service
+#                                            (pooled re-arm steady-state
+#                                            setup >= 5x per-session spawn,
+#                                            arena recycling, >= 4 concurrent
+#                                            sessions through one pool,
+#                                            bit-identical + zero-copy,
+#                                            /dev/shm clean after shutdown)
 #   benchmarks/perf_coldpath.py --quick      cold-cache read engine (depth-
 #                                            managed async submission >= 1.5x
 #                                            blocking under the modeled PFS,
@@ -87,6 +94,9 @@ python benchmarks/perf_recovery.py --quick
 echo "== fileset benchmark (smoke, sharded sessions + staged-bytes ledger) =="
 python benchmarks/perf_fileset.py --quick
 
+echo "== reader-service benchmark (smoke, pooled re-arm vs spawn) =="
+python benchmarks/perf_service.py --quick
+
 echo "== cold-path benchmark (smoke, depth-managed submission + O_DIRECT) =="
 python benchmarks/perf_coldpath.py --quick
 
@@ -96,6 +106,14 @@ for seed in 11 20260809 424242; do
   CKIO_FAULT_SEED=$seed PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -q tests/test_recovery.py \
     -k "fault_plan or replay or reissue or respawn"
+done
+
+echo "== fault matrix (pooled reader-service backend) =="
+for seed in 11 20260809 424242; do
+  echo "-- CKIO_FAULT_SEED=$seed (service) --"
+  CKIO_FAULT_SEED=$seed PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -q tests/test_service.py \
+    -k "fault_plan or respawn or sibling"
 done
 
 echo "== coverage floor (core + data + io + ipc) =="

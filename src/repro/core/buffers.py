@@ -302,8 +302,13 @@ class BufferReaderSet:
             self._complete_evt.set()
         self.started = False
         # Borrowed read-only views handed to zero-copy clients; released
-        # (invalidated) when the session closes.
+        # (invalidated) when the session closes. _pinned_borrows counts the
+        # ones a live buffer export kept alive through invalidation — the
+        # reader-service arena pool quarantines (never recycles) a segment
+        # with a nonzero count, so a pinned view can't alias a later
+        # session's bytes.
         self._borrows: List[memoryview] = []
+        self._pinned_borrows = 0
 
     def _alloc_arena(self, plan: StripePlan) -> np.ndarray:
         """Allocate the session arena (subclass hook). np.empty skips the
@@ -775,12 +780,15 @@ class BufferReaderSet:
         with self._lock:
             borrows, self._borrows = self._borrows, []
         n = 0
+        pinned = 0
         for mv in borrows:
             try:
                 mv.release()
                 n += 1
             except BufferError:   # live export pins the arena; safe to skip
-                pass
+                pinned += 1
+        with self._lock:
+            self._pinned_borrows += pinned
         return n
 
     def claim_error_surface(self) -> bool:

@@ -93,6 +93,24 @@ class Director:
         # sharded-staging side also writes its own ShardMetrics).
         self.shards = ShardMetrics()
         self._observers.append(self.shards.merge_session)
+        # Optional persistent reader service (ipc/service.py): when
+        # attached, process-backend sessions run on its pooled workers /
+        # recycled arenas instead of spawning per session.
+        self.service = None
+
+    def attach_service(self, service) -> None:
+        """Attach a :class:`~repro.ipc.service.ReaderService`: subsequent
+        ``backend="process"`` sessions check workers out of its pool
+        (subject to ``FileOptions.use_service`` routing) and its
+        :class:`~repro.core.metrics.ServiceMetrics` joins the observer
+        path (per-session service fields fold into pool-level counters).
+        The caller keeps ownership: ``service.shutdown()`` is not run by
+        the Director."""
+        if self.service is service:
+            return
+        self.service = service
+        service.director = self
+        self.add_observer(service.metrics.record_session)
 
     def add_observer(self, observe: Callable[[SessionMetrics], None]) -> None:
         """Register a session-close observer on the shared observation path
@@ -326,18 +344,49 @@ class Director:
     # -- session construction --------------------------------------------------
     def _build_session(self, file: FileHandle, plan, reader_pes: List[int],
                        opts: FileOptions, ropts) -> Session:
-        """Allocate an id, construct the reader set for ``ropts.backend``,
-        register and start it. On any failure the half-created session is
-        scrubbed from the tables and backend resources released before the
-        exception propagates (so a fallback retry starts clean)."""
+        """Backend dispatch + service routing. With a ReaderService
+        attached, process-backend sessions run on the pool; a saturated
+        service (ServiceBusy at admission) degrades to legacy per-session
+        spawn when ``FileOptions.use_service`` is left at auto (None) and
+        surfaces to the caller when the session was pinned (True)."""
+        if (self.service is not None and ropts.backend == "process"
+                and opts.use_service is not False):
+            from repro.ipc.service import ServiceBusy
+            try:
+                return self._construct_session(
+                    file, plan, reader_pes, opts, ropts,
+                    service=self.service)
+            except ServiceBusy:
+                if opts.use_service:
+                    raise
+                # Auto mode: admission queue full — this session pays the
+                # legacy spawn instead of waiting behind the pool.
+        return self._construct_session(file, plan, reader_pes, opts, ropts)
+
+    def _construct_session(self, file: FileHandle, plan,
+                           reader_pes: List[int], opts: FileOptions, ropts,
+                           service=None) -> Session:
+        """Allocate an id, construct the reader set for ``ropts.backend``
+        (or the attached service), register and start it. On any failure
+        the half-created session is scrubbed from the tables and backend
+        resources released before the exception propagates (so a fallback
+        retry starts clean)."""
         with self._lock:
             sid = next(self._session_ids)
         readers = None
         try:
-            reader_cls = (ProcessReaderSet if ropts.backend == "process"
-                          else BufferReaderSet)
-            readers = reader_cls(file.posix, plan, self.sched,
-                                 reader_pes, ropts)
+            if service is not None:
+                from repro.ipc.service import ServiceReaderSet
+                readers = ServiceReaderSet(file.posix, plan, self.sched,
+                                           reader_pes, ropts,
+                                           service=service,
+                                           tenant=opts.tenant)
+            else:
+                reader_cls = (ProcessReaderSet
+                              if ropts.backend == "process"
+                              else BufferReaderSet)
+                readers = reader_cls(file.posix, plan, self.sched,
+                                     reader_pes, ropts)
             session = Session(
                 id=sid,
                 file=file,

@@ -139,6 +139,52 @@ consume executable once; the sizer EMA-smooths and 256 KiB-quantizes its
 suggestions so sizes converge after the first few sessions, but a
 latency-critical run should pin ``splinter_bytes`` statically.
 
+Persistent reader service (constructor ``service=``)
+----------------------------------------------------
+Passing a ``repro.ipc.service.ReaderService`` attaches it to this
+pipeline's Director: every ``backend="process"`` step session then checks
+its workers out of the service's persistent pool and its arena out of the
+recycled-arena pool instead of spawning processes and creating a fresh
+shm segment per step — the per-step session setup drops from worker-spawn
+cost (~0.5 s/worker) to one mailbox write + attach barrier
+(``benchmarks/perf_service.py`` gates the ratio at >= 5x). Every delivery
+contract above holds unchanged (the pooled arena is the same kind of
+mapped segment, so zero-copy borrowed views, streamed chunk staging and
+``bytes_copied == 0`` are untouched), with these service-specific
+amendments:
+
+  * **View lifetime across arena recycling**: borrowed views still die at
+    step retirement (``ValueError`` on access), but the pages behind them
+    now outlive the session — the segment returns to the pool and is
+    recycled into a later session. A view that survives invalidation via
+    a live buffer export (an ``np.frombuffer`` array you kept) therefore
+    QUARANTINES the segment: the service unlinks it instead of recycling,
+    so the export can never silently alias a later step's bytes. Code
+    that caches views across sessions can re-validate explicitly with
+    ``SharedArena.check_generation(gen)`` (raises ``StaleArenaView``);
+    the generation a session ran under is
+    ``session.metrics.summary()["service_epoch"]``-adjacent bookkeeping
+    on the reader set (``ServiceReaderSet.arena_generation``).
+  * **When ``ServiceBusy`` is raised**: admission rejects a session only
+    when BOTH the inflight cap (``ServiceOptions.max_sessions``) and the
+    FIFO queue (``max_queue``) are full. With ``FileOptions.use_service``
+    left at auto (``None``) the Director catches it and falls back to the
+    legacy per-session spawn path — the step still runs, it just pays the
+    spawn; ``use_service=True`` pins the step to the pool and surfaces
+    ``ServiceBusy`` out of the step's futures instead. ``use_service=
+    False`` (or simply not attaching a service) keeps the legacy path
+    unconditionally.
+  * **Degraded fallback to spawn** is per session and non-sticky —
+    unlike the ``fallback_backend="thread"`` downgrade, a later step
+    re-tries the pool as soon as admission has room.
+  * **Failure containment**: a pooled worker crash evicts that worker
+    only; the affected step recovers per its own ``FileOptions.recovery``
+    (or fails alone) and concurrently running steps/pipelines sharing the
+    pool are untouched.
+  * **Ownership**: the pipeline never shuts the service down — call
+    ``service.shutdown()`` after the last pipeline using it closes
+    (``/dev/shm`` is clean only after that).
+
 Cold-cache reads (``direct_io`` / ``queue_depth`` — io/submit.py)
 -----------------------------------------------------------------
 First-epoch corpora are COLD: nothing below survives in the page cache,
@@ -387,6 +433,7 @@ class CkIOPipeline:
         num_consumers: Optional[int] = None,
         consumer_pes: Optional[List[int]] = None,
         file_opts: Optional[FileOptions] = None,
+        service=None,
         prefetch_depth: int = 2,
         start_step: int = 0,
         drop_remainder: bool = True,
@@ -409,6 +456,13 @@ class CkIOPipeline:
         self.seq_len = seq_len
         self.ck = ckio or CkIO(num_pes=num_pes)
         self.file_opts = file_opts or FileOptions()
+        # Persistent reader service (ipc/service.py): attach BEFORE any
+        # step session starts so every process-backend session checks its
+        # workers/arena out of the pool. The caller keeps ownership of the
+        # service (and its shutdown) — pipelines, like sessions, come and
+        # go faster than the pool they share.
+        if service is not None:
+            self.ck.director.attach_service(service)
         if is_fileset:
             self.file = self.ck.open_fileset_sync(path, self.file_opts)
         else:

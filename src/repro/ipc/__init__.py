@@ -1,6 +1,6 @@
 """Cross-process IPC primitives for the multi-process reader backend.
 
-Three layers (bottom-up), consumed by ``core/buffers.py``'s
+Four layers (bottom-up), consumed by ``core/buffers.py``'s
 ``ProcessReaderSet`` supervisor when ``FileOptions(backend="process")``:
 
 * ``shm``  — :class:`SharedArena`: a named shared-memory segment mapped into
@@ -9,31 +9,65 @@ Three layers (bottom-up), consumed by ``core/buffers.py``'s
   process boundary.
 * ``ring`` — :class:`EventRing`: a fixed-slot, sequence-numbered SPSC
   splinter-event ring (futex-free polling with backoff) per worker, plus
-  the attach/go/stop/error handshake header.
+  the attach/go/stop/error handshake header; :class:`CommandRing`: the
+  single-slot mailbox a parked pooled worker receives its next session
+  spec through.
 * ``worker`` — :func:`worker_main`: the spawn entry point; opens its own
   fds, pins + first-touches its stripes, reads splinters into the arena and
-  publishes completion events.
+  publishes completion events. :func:`service_worker_main` is the pooled
+  variant: park on the mailbox, run a session, park again.
+* ``service`` — :class:`ReaderService`: the persistent reader runtime —
+  pooled workers, recycled arenas (:class:`ArenaPool`), multi-session
+  admission with per-tenant fair share, and one MPSC demux poller.
+  (Imported lazily: the service layer sits ON TOP of ``core/buffers.py``,
+  which itself imports the lower ipc layers.)
 """
-from repro.ipc.ring import EventRing, RingEvent, ring_bytes
-from repro.ipc.shm import SharedArena
+from repro.ipc.ring import CommandRing, EventRing, RingEvent, ring_bytes
+from repro.ipc.shm import SharedArena, StaleArenaView
 from repro.ipc.worker import (
     ExitAfter,
     RaiseAfter,
+    ServiceWorkerBoot,
+    SpecSpill,
     StallReader,
     WorkerCrashed,
     WorkerSpec,
+    service_worker_main,
     worker_main,
 )
 
+_SERVICE_EXPORTS = (
+    "ReaderService",
+    "ServiceBusy",
+    "ServiceOptions",
+    "ServiceReaderSet",
+    "ArenaPool",
+)
+
 __all__ = [
+    "CommandRing",
     "EventRing",
     "RingEvent",
     "ring_bytes",
     "SharedArena",
+    "StaleArenaView",
     "ExitAfter",
     "RaiseAfter",
+    "ServiceWorkerBoot",
+    "SpecSpill",
     "StallReader",
     "WorkerCrashed",
     "WorkerSpec",
+    "service_worker_main",
     "worker_main",
+    *_SERVICE_EXPORTS,
 ]
+
+
+def __getattr__(name: str):
+    # repro.ipc.service imports repro.core.buffers, which imports the ring/
+    # shm/worker layers above — loading it eagerly here would be a cycle.
+    if name in _SERVICE_EXPORTS:
+        from repro.ipc import service
+        return getattr(service, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

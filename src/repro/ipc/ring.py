@@ -50,13 +50,13 @@ from dataclasses import dataclass
 from typing import Callable, List, Optional
 
 # -- layout -------------------------------------------------------------------
-HDR_BYTES = 80           # 10 u64 fields
+HDR_BYTES = 96           # 12 u64 fields
 MSG_BYTES = 192          # worker error message (UTF-8, truncated)
-SLOT_BYTES = 64          # stamp + 7 payload words
+SLOT_BYTES = 72          # stamp + 8 payload words
 _WORD = struct.Struct("<Q")
-_SLOT = struct.Struct("<QQQQQQdd")   # stamp, index, reader, offset, nbytes,
-#                                      arena_off, t_arrival, read_dt
-_PAYLOAD = struct.Struct("<QQQQQdd")  # the slot minus its stamp word
+_SLOT = struct.Struct("<QQQQQQddQ")  # stamp, index, reader, offset, nbytes,
+#                                      arena_off, t_arrival, read_dt, epoch
+_PAYLOAD = struct.Struct("<QQQQQddQ")  # the slot minus its stamp word
 
 # header word offsets (bytes)
 _OFF_CAP = 0
@@ -69,6 +69,11 @@ _OFF_STOP = 48           # parent-owned: drain request
 _OFF_PAGES = 56          # worker-reported: first-touched pages << 2 | pin
 _OFF_IO_RETRIES = 64     # worker-reported: transient preads retried
 _OFF_IO_SUPPRESSED = 72  # worker-reported: advisory errors suppressed
+# Pooled-worker re-arm protocol (ipc/service.py): the session generation a
+# pooled worker is currently armed with, and the last generation whose
+# drain it finished. Per-session workers leave both at 0.
+_OFF_EPOCH = 80          # worker-owned: currently-armed session epoch
+_OFF_EPOCH_DONE = 88     # worker-owned: last epoch fully drained
 
 # worker lifecycle states (_OFF_STATE)
 ST_INIT = 0
@@ -109,6 +114,8 @@ class RingEvent:
     t_arrival: float     # worker-side perf_counter (CLOCK_MONOTONIC —
     #                      comparable across processes on Linux)
     read_dt: float       # wall seconds inside the worker's pread loop
+    epoch: int = 0       # session generation that produced this event
+    #                      (pooled workers only; 0 = per-session worker)
 
 
 class EventRing:
@@ -188,7 +195,7 @@ class EventRing:
         record = _SLOT.pack(
             0,                               # stamp written LAST (below)
             ev.index, ev.reader, ev.offset, ev.nbytes, ev.arena_off,
-            ev.t_arrival, ev.read_dt,
+            ev.t_arrival, ev.read_dt, ev.epoch,
         )
         payload = record[8:]
         if self.fault is not None and self.fault(seq):
@@ -228,6 +235,20 @@ class EventRing:
         even across a crash."""
         self._set(_OFF_IO_RETRIES, retries)
         self._set(_OFF_IO_SUPPRESSED, suppressed)
+
+    def set_epoch(self, epoch: int) -> None:
+        """Worker-side: record the session generation this worker is now
+        armed with. Written before the worker enters the drain loop for a
+        pooled session, so the supervisor can attribute ring events."""
+        self._set(_OFF_EPOCH, epoch)
+
+    def set_done_epoch(self, epoch: int) -> None:
+        """Worker-side: mark ``epoch``'s drain finished. Written LAST in the
+        pooled session lifecycle — after ``set_io`` and ``set_state(DONE)``
+        — so a supervisor observing ``done_epoch() == epoch`` knows every
+        event of that generation is already published and may safely
+        re-arm the ring after one final drain."""
+        self._set(_OFF_EPOCH_DONE, epoch)
 
     def set_error(self, message: str) -> None:
         raw = message.encode("utf-8", "replace")[: MSG_BYTES - 1]
@@ -278,6 +299,7 @@ class EventRing:
             out.append(RingEvent(
                 index=rec[0], reader=rec[1], offset=rec[2], nbytes=rec[3],
                 arena_off=rec[4], t_arrival=rec[5], read_dt=rec[6],
+                epoch=rec[7],
             ))
             tail += 1
             # Write back per record (not per batch): each write re-opens a
@@ -315,3 +337,139 @@ class EventRing:
     def pending(self) -> int:
         """Published-but-unconsumed record count (supervisor diagnostics)."""
         return self._get(_OFF_HEAD) - self._get(_OFF_TAIL)
+
+    def epoch(self) -> int:
+        return self._get(_OFF_EPOCH)
+
+    def done_epoch(self) -> int:
+        return self._get(_OFF_EPOCH_DONE)
+
+    def rearm_reset(self) -> None:
+        """Supervisor-side: return a drained ring to its pre-session state
+        so a parked pooled worker can run another session through it.
+
+        Only called while the worker is parked (state DONE, done_epoch
+        caught up, nothing in flight), so no producer races the reset.
+        Head/tail/capacity/pid survive — sequences keep monotonically
+        increasing across sessions, which is what makes a stale slot from a
+        previous lap un-consumable. Lifecycle words (state, go, stop,
+        touch/pin, io counters) and the error message are zeroed so the
+        next session's attach barrier and metric fold-in start clean."""
+        self._set(_OFF_STATE, ST_INIT)
+        self._set(_OFF_GO, 0)
+        self._set(_OFF_STOP, 0)
+        self._set(_OFF_PAGES, 0)
+        self._set(_OFF_IO_RETRIES, 0)
+        self._set(_OFF_IO_SUPPRESSED, 0)
+        self._buf[HDR_BYTES] = 0             # truncate error message
+
+
+# -- command mailbox (parent -> parked pooled worker) --------------------------
+# One fixed-size single-slot mailbox per pooled worker, carrying the pickled
+# WorkerSpec for the next session. Same self-validating discipline as the
+# event ring: the parent writes payload + length first and the epoch word
+# last (with a CRC keyed by the epoch), the worker CRC-checks before acting
+# and acknowledges by echoing the epoch into the ack word. SPSC by
+# construction — exactly one parent thread sends, one worker receives.
+
+_CMD_OFF_EPOCH = 0       # parent-owned, written LAST: command generation
+_CMD_OFF_ACK = 8         # worker-owned: last epoch read and accepted
+_CMD_OFF_STOP = 16       # parent-owned: retire request (worker exits)
+_CMD_OFF_LEN = 24        # parent-owned: payload byte length
+_CMD_OFF_CRC = 32        # parent-owned: epoch-keyed payload CRC32
+_CMD_OFF_PID = 40        # worker-owned: pid heartbeat for diagnostics
+CMD_HDR_BYTES = 48
+
+
+class CommandRing:
+    """Single-slot command mailbox over a ``memoryview`` of shared memory.
+
+    ``send`` hands a parked worker its next session spec; ``wait_command``
+    is the worker's park loop. The mailbox deliberately holds ONE command:
+    a worker must ack (finish arming) epoch N before the parent may send
+    N+1, which the service guarantees by never re-arming a worker whose
+    previous session has not checked back in.
+    """
+
+    def __init__(self, buf: memoryview, create: bool = False):
+        if len(buf) <= CMD_HDR_BYTES:
+            raise ValueError("command ring needs payload capacity")
+        self._buf = buf
+        self.capacity = len(buf) - CMD_HDR_BYTES
+        if create:
+            buf[:CMD_HDR_BYTES] = b"\x00" * CMD_HDR_BYTES
+
+    def _get(self, off: int) -> int:
+        return _WORD.unpack_from(self._buf, off)[0]
+
+    def _set(self, off: int, val: int) -> None:
+        _WORD.pack_into(self._buf, off, val)
+
+    # -- parent side ----------------------------------------------------------
+    def send(self, epoch: int, payload: bytes) -> None:
+        """Publish one command. Caller must ensure the worker is parked
+        (previous command acked); enforced here as a fail-fast check."""
+        if epoch <= 0:
+            raise ValueError("command epoch must be positive")
+        if len(payload) > self.capacity:
+            raise ValueError(
+                f"command payload {len(payload)} bytes exceeds mailbox "
+                f"capacity {self.capacity}")
+        prev = self._get(_CMD_OFF_EPOCH)
+        if prev and self._get(_CMD_OFF_ACK) != prev:
+            raise RuntimeError(
+                f"command epoch {prev} not yet acked; worker not parked")
+        self._buf[CMD_HDR_BYTES : CMD_HDR_BYTES + len(payload)] = payload
+        self._set(_CMD_OFF_LEN, len(payload))
+        self._set(_CMD_OFF_CRC, zlib.crc32(payload, epoch & 0xFFFFFFFF))
+        # Publication point (same stamp-last discipline as EventRing).
+        self._set(_CMD_OFF_EPOCH, epoch)
+
+    def request_stop(self) -> None:
+        self._set(_CMD_OFF_STOP, 1)
+
+    def acked(self, epoch: int) -> bool:
+        return self._get(_CMD_OFF_ACK) == epoch
+
+    def pid(self) -> int:
+        return self._get(_CMD_OFF_PID)
+
+    # -- worker side ----------------------------------------------------------
+    def set_pid(self, pid: int) -> None:
+        self._set(_CMD_OFF_PID, pid)
+
+    def wait_command(
+        self,
+        last_epoch: int,
+        poll_s: float = 100e-6,
+        should_abort: Optional[Callable[[], bool]] = None,
+    ) -> "Optional[tuple[int, bytes]]":
+        """Park until a command newer than ``last_epoch`` arrives.
+
+        Returns ``(epoch, payload)``, or None on a retire request or when
+        ``should_abort()`` turns true (orphaned worker). A CRC mismatch
+        means the payload stores are not all visible yet on a weakly-
+        ordered host — treated exactly like "no command yet" and retried.
+        """
+        pause = poll_s
+        while True:
+            if self._get(_CMD_OFF_STOP):
+                return None
+            if should_abort is not None and should_abort():
+                return None
+            epoch = self._get(_CMD_OFF_EPOCH)
+            if epoch > last_epoch:
+                n = self._get(_CMD_OFF_LEN)
+                payload = bytes(
+                    self._buf[CMD_HDR_BYTES : CMD_HDR_BYTES + n])
+                if (zlib.crc32(payload, epoch & 0xFFFFFFFF)
+                        == self._get(_CMD_OFF_CRC)):
+                    return epoch, payload
+                # torn publication — retry without acking
+            time.sleep(pause)
+            pause = min(pause * 2, 2e-3)
+
+    def ack(self, epoch: int) -> None:
+        """Worker-side: acknowledge ``epoch`` — the spec has been read and
+        arming has begun; the mailbox slot is free for the next send."""
+        self._set(_CMD_OFF_ACK, epoch)

@@ -33,6 +33,23 @@ closes; ``close()`` releases the parent mapping best-effort (a live buffer
 export pins the pages — Python keeps them alive for the exporter, so this
 stays memory-safe) and ``unlink()`` removes the name so the segment dies
 with its last mapping.
+
+Service model (``ipc/service.py``) amendments to that contract:
+
+* **Recycling**: a ``ReaderService`` arena pool reuses segments across
+  sessions so steady-state setup faults no page and runs no ``ftruncate``.
+  A recycled segment keeps its first-touch NUMA placement — exactly the
+  point of recycling. Sessions therefore do NOT ``unlink``/``close`` a
+  pooled arena at close; they hand it back to the pool, which quarantines
+  (unlinks) it only if borrowed views are still pinned.
+* **Generation stamp**: every pool checkout bumps ``generation``. A
+  borrowed view captured under generation G aliases *new* session data
+  once the segment is recycled into generation G+1 — callers that cache
+  views across sessions must re-validate with :meth:`check_generation`,
+  which raises :class:`StaleArenaView` instead of silently aliasing.
+* **Detach vs close**: pooled workers release their mapping with
+  :meth:`detach` (never unlinks — the segment outlives any one worker);
+  ``close()`` remains the owner's terminal teardown.
 """
 from __future__ import annotations
 
@@ -45,6 +62,12 @@ from typing import Optional
 import numpy as np
 
 _SHM_DIR = "/dev/shm"
+
+
+class StaleArenaView(RuntimeError):
+    """A borrowed view's arena generation no longer matches the segment —
+    the segment was recycled into a newer session and the view would alias
+    that session's data. Raised by ``SharedArena.check_generation``."""
 
 
 def shm_dir() -> str:
@@ -68,6 +91,10 @@ class SharedArena:
         self._mm: Optional[mmap.mmap] = mm
         self._owner = owner        # creator: responsible for unlink
         self._arr: Optional[np.ndarray] = None
+        # Pool-recycling generation: bumped by ArenaPool on every checkout.
+        # 0 = never pooled (per-session arena). Borrowed views record the
+        # generation they were captured under and fail fast on mismatch.
+        self.generation = 0
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -118,7 +145,31 @@ class SharedArena:
                                       count=self.nbytes)
         return self._arr
 
+    def check_generation(self, expected: int) -> None:
+        """Fail fast if the arena has been recycled since ``expected`` was
+        captured (or torn down entirely) — stale views must never alias a
+        newer session's bytes."""
+        if self._mm is None or self.generation != expected:
+            raise StaleArenaView(
+                f"arena {self.path or '<unlinked>'} is at generation "
+                f"{self.generation if self._mm is not None else '<closed>'}"
+                f", view was captured at generation {expected}")
+
     # -- teardown ------------------------------------------------------------
+    def detach(self) -> None:
+        """Release this process's mapping WITHOUT unlinking the name.
+
+        The pooled-worker teardown: a worker finishing a session unmaps its
+        view of a pool-owned segment that other workers / later sessions
+        will keep using. Same BufferError tolerance as ``close()``."""
+        self._arr = None
+        if self._mm is not None:
+            try:
+                self._mm.close()
+            except BufferError:      # live export pins the mapping; safe
+                pass
+            self._mm = None
+
     def unlink(self) -> None:
         """Remove the segment's name (idempotent). Existing mappings — ours
         and the workers' — stay valid; the memory dies with the last one."""

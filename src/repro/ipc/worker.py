@@ -28,6 +28,16 @@ inheritance across ``spawn``:
    which the supervisor's dead-child check converts into a descriptive
    session error instead of a hang.
 
+Pooled workers (``ipc/service.py``): ``service_worker_main`` is the
+long-lived variant — the same protocol steps 1–5 run per *session* inside a
+park/re-arm loop. A parked worker blocks on its :class:`CommandRing`
+mailbox; each command carries a pickled :class:`WorkerSpec` for the next
+session (the worker re-opens its own data/arena fds from it — nothing
+persists across sessions except the process, its event ring, and the
+mailbox). The worker stamps every ring event and the ring header with the
+command's session *epoch*, and writes ``done_epoch`` strictly last so the
+service can distinguish "drained and parked" from "still publishing".
+
 Test hooks (picklable — ``spawn`` re-imports this module in the child):
 :class:`StallReader` reproduces the thread backend's ``delay_model`` for a
 chosen reader; :class:`ExitAfter` hard-kills the worker mid-session
@@ -36,6 +46,7 @@ chosen reader; :class:`ExitAfter` hard-kills the worker mid-session
 from __future__ import annotations
 
 import os
+import pickle
 import time
 from dataclasses import dataclass
 from typing import Optional, Tuple
@@ -50,6 +61,7 @@ from repro.ipc.ring import (
     PIN_OK,
     ST_ATTACHED,
     ST_DONE,
+    CommandRing,
     EventRing,
     RingEvent,
     ring_bytes,
@@ -106,40 +118,40 @@ class WorkerSpec:
     queue_depth: int = 0
     readahead_bytes: int = 0
     submit_mode: str = "auto"
+    # Pooled sessions (ipc/service.py): the session generation this spec
+    # belongs to. Stamped into the ring header and every published event so
+    # the service's demux poller can route events to the right session and
+    # drop stale ones. 0 = legacy per-session worker.
+    epoch: int = 0
 
 
-def worker_main(spec: WorkerSpec) -> None:
-    """Spawn entry point (see module docstring for the protocol)."""
-    # Orphan guard: polled between splinters and inside every backoff loop
-    # (wait_go, full-ring publish). Deliberately NOT PR_SET_PDEATHSIG —
-    # the death signal fires when the *thread* that spawned us exits, and
-    # workers are spawned from whichever transient thread happens to pump
-    # the session-start task; polling getppid() tracks the supervisor
-    # *process* and nothing else.
-    if spec.parent_pid:
-        orphaned = lambda: os.getppid() != spec.parent_pid  # noqa: E731
-        if orphaned():                       # parent died during spawn
-            return
-    else:
-        orphaned = lambda: False             # noqa: E731 (inline runs)
-    rings = SharedArena.attach(spec.ring_path, spec.ring_region_bytes)
-    ring = EventRing(
-        rings.buf[spec.ring_offset:
-                  spec.ring_offset + ring_bytes(spec.ring_slots)],
-        spec.ring_slots,
-    )
-    ring.set_pid(os.getpid())
-    ring.fault = spec.ring_fault
-    io = _IOCounters()
+def _make_orphan_guard(parent_pid: int):
+    """getppid-polling supervisor-death check (see worker_main notes)."""
+    if parent_pid:
+        return lambda: os.getppid() != parent_pid
+    return lambda: False
+
+
+def _run_session(spec: WorkerSpec, ring: EventRing, io: "_IOCounters",
+                 orphaned) -> None:
+    """One session's worth of the worker protocol: place → attach arena →
+    barrier → drain. Shared verbatim by the per-session entry point
+    (``worker_main``) and the pooled park/re-arm loop
+    (``service_worker_main``); the caller owns state/error reporting.
+
+    The arena mapping is per-session even in a pooled worker — it is
+    detached (never unlinked) on the way out so a long-lived worker does
+    not accumulate dead mappings across sessions.
+    """
+    pin = PIN_NONE
+    if spec.pin_cpus:
+        # Whole-process affinity: unlike the thread backend's per-thread
+        # re-pinning, one worker process has one CPU set — its primary
+        # stripe's domain (workers owning stripes in several domains
+        # keep the first; first-touch still runs per stripe).
+        pin = PIN_OK if pin_thread_to_cpus(spec.pin_cpus) else PIN_FAILED
+    arena = SharedArena.attach(spec.arena_path, spec.arena_bytes)
     try:
-        pin = PIN_NONE
-        if spec.pin_cpus:
-            # Whole-process affinity: unlike the thread backend's per-thread
-            # re-pinning, one worker process has one CPU set — its primary
-            # stripe's domain (workers owning stripes in several domains
-            # keep the first; first-touch still runs per stripe).
-            pin = PIN_OK if pin_thread_to_cpus(spec.pin_cpus) else PIN_FAILED
-        arena = SharedArena.attach(spec.arena_path, spec.arena_bytes)
         arr = arena.ndarray()
         pages = 0
         if spec.prefault:
@@ -150,7 +162,6 @@ def worker_main(spec: WorkerSpec) -> None:
         ring.set_touch(pages, pin)
         ring.set_state(ST_ATTACHED)
         if not ring.wait_go(should_abort=orphaned):   # cancelled / orphaned
-            ring.set_state(ST_DONE)
             return
         if spec.shards is not None:          # FileSet: own fd per shard
             f = ShardedFile.from_segments(spec.shards,
@@ -161,8 +172,6 @@ def worker_main(spec: WorkerSpec) -> None:
         try:
             if spec.queue_depth >= 2:        # depth-managed async drain
                 _drain_async(spec, f, arr, ring, io, orphaned)
-                ring.set_io(io.retries, io.suppressed)
-                ring.set_state(ST_DONE)
                 return
             for sp in spec.splinters:
                 if ring.stop_requested():    # graceful drain request
@@ -180,6 +189,7 @@ def worker_main(spec: WorkerSpec) -> None:
                 view = memoryview(arr)[lo: lo + sp.nbytes]
                 n = f.pread_into(sp.offset, view, stats=io)
                 dt = time.perf_counter() - t0
+                view = None
                 if n != sp.nbytes:
                     raise IOError(
                         f"short read: wanted {sp.nbytes} at {sp.offset}, "
@@ -192,17 +202,137 @@ def worker_main(spec: WorkerSpec) -> None:
                     index=sp.index, reader=sp.reader, offset=sp.offset,
                     nbytes=sp.nbytes, arena_off=lo,
                     t_arrival=time.perf_counter(), read_dt=dt,
+                    epoch=spec.epoch,
                 ), should_abort=orphaned)
                 if not published:            # stop/orphan won the backoff
                     break
         finally:
             f.close()
+    finally:
+        # Drop the np export before detaching so the mapping is actually
+        # released here, not lazily at the next GC — a pooled worker runs
+        # many sessions and must not stack dead arena mappings.
+        arr = None                           # noqa: F841
+        arena.detach()
+
+
+def worker_main(spec: WorkerSpec) -> None:
+    """Spawn entry point (see module docstring for the protocol)."""
+    # Orphan guard: polled between splinters and inside every backoff loop
+    # (wait_go, full-ring publish). Deliberately NOT PR_SET_PDEATHSIG —
+    # the death signal fires when the *thread* that spawned us exits, and
+    # workers are spawned from whichever transient thread happens to pump
+    # the session-start task; polling getppid() tracks the supervisor
+    # *process* and nothing else.
+    orphaned = _make_orphan_guard(spec.parent_pid)
+    if spec.parent_pid and orphaned():       # parent died during spawn
+        return
+    rings = SharedArena.attach(spec.ring_path, spec.ring_region_bytes)
+    ring = EventRing(
+        rings.buf[spec.ring_offset:
+                  spec.ring_offset + ring_bytes(spec.ring_slots)],
+        spec.ring_slots,
+    )
+    ring.set_pid(os.getpid())
+    ring.fault = spec.ring_fault
+    io = _IOCounters()
+    try:
+        _run_session(spec, ring, io, orphaned)
         ring.set_io(io.retries, io.suppressed)
         ring.set_state(ST_DONE)
     except BaseException as e:
         ring.set_io(io.retries, io.suppressed)
         ring.set_error(f"{type(e).__name__}: {e}")
         raise SystemExit(1)
+
+
+@dataclass
+class ServiceWorkerBoot:
+    """Everything a POOLED worker needs at spawn time — just its mailbox
+    and event ring. Per-session state (file, arena, splinters) arrives
+    later through the mailbox as pickled :class:`WorkerSpec` payloads."""
+
+    worker_id: int
+    cmd_path: str                        # CommandRing shm segment name
+    cmd_bytes: int
+    ring_path: str                       # shared ring-block segment name
+    ring_region_bytes: int
+    ring_offset: int                     # this worker's ring within the block
+    ring_slots: int
+    parent_pid: int = 0                  # orphan guard (0 = thread backend)
+
+
+@dataclass
+class SpecSpill:
+    """Mailbox indirection for oversized specs: the service pickles the
+    real ``WorkerSpec`` to a file (under the shm dir — tmpfs, not disk)
+    and sends this small marker instead. The worker reads and deletes it."""
+
+    path: str
+    nbytes: int
+
+    def load(self) -> WorkerSpec:
+        with open(self.path, "rb") as fh:
+            raw = fh.read(self.nbytes)
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass
+        return pickle.loads(raw)
+
+
+def service_worker_main(boot: ServiceWorkerBoot) -> None:
+    """Pooled-worker entry point: park on the mailbox, run sessions.
+
+    Lifecycle per command epoch N:
+      wait_command → unpickle WorkerSpec → ack(N) → set_epoch(N) →
+      ``_run_session`` (attach/barrier/drain exactly as a per-session
+      worker) → set_io → DONE → **set_done_epoch(N) last** → park again.
+
+    Error contract is deliberately conservative: ANY session exception
+    reports ERROR on the ring and exits the process — the service evicts
+    this worker and lazily checks in a replacement. A worker that failed
+    mid-drain is cheaper to replace than to prove clean.
+    """
+    orphaned = _make_orphan_guard(boot.parent_pid)
+    if boot.parent_pid and orphaned():
+        return
+    cmd_shm = SharedArena.attach(boot.cmd_path, boot.cmd_bytes)
+    cmd = CommandRing(cmd_shm.buf)
+    cmd.set_pid(os.getpid())
+    rings = SharedArena.attach(boot.ring_path, boot.ring_region_bytes)
+    ring = EventRing(
+        rings.buf[boot.ring_offset:
+                  boot.ring_offset + ring_bytes(boot.ring_slots)],
+        boot.ring_slots,
+    )
+    ring.set_pid(os.getpid())
+    epoch = 0
+    while True:
+        got = cmd.wait_command(epoch, should_abort=orphaned)
+        if got is None:                      # retired / orphaned
+            return
+        epoch, payload = got
+        spec = pickle.loads(payload)
+        if isinstance(spec, SpecSpill):
+            spec = spec.load()
+        spec.epoch = epoch                   # events carry this generation
+        cmd.ack(epoch)                       # mailbox slot is free again
+        ring.fault = spec.ring_fault
+        io = _IOCounters()
+        try:
+            ring.set_epoch(epoch)
+            _run_session(spec, ring, io, orphaned)
+            ring.set_io(io.retries, io.suppressed)
+            ring.set_state(ST_DONE)
+            # Written LAST: once the service sees done_epoch == epoch it
+            # knows every event of this generation is already in the ring
+            # and the post-done drain + rearm_reset are race-free.
+            ring.set_done_epoch(epoch)
+        except BaseException as e:
+            ring.set_io(io.retries, io.suppressed)
+            ring.set_error(f"{type(e).__name__}: {e}")
+            raise SystemExit(1)
 
 
 def _drain_async(spec: WorkerSpec, f, arr, ring: EventRing,
@@ -254,6 +384,7 @@ def _drain_async(spec: WorkerSpec, f, arr, ring: EventRing,
             index=sp.index, reader=sp.reader, offset=sp.offset,
             nbytes=sp.nbytes, arena_off=sp.offset - base,
             t_arrival=time.perf_counter(), read_dt=dt,
+            epoch=spec.epoch,
         ), should_abort=orphaned)
         if not published:                    # stop/orphan won the backoff
             stopped[0] = True

@@ -100,6 +100,18 @@ def main() -> None:
     ap.add_argument("--max-workers", type=int, default=4,
                     help="process backend: cap on reader worker processes"
                          " per session")
+    ap.add_argument("--service", action="store_true",
+                    help="process backend: run every step session on a"
+                         " persistent reader service (ipc/service.py) —"
+                         " pooled long-lived workers re-armed per session"
+                         " through shm mailboxes and recycled prefaulted"
+                         " arenas, instead of spawning processes and"
+                         " creating a fresh segment each step. Implies"
+                         " --backend process")
+    ap.add_argument("--pool-workers", type=int, default=4,
+                    help="--service: persistent workers in the pool"
+                         " (sessions check workers out per step; sizing it"
+                         " at --max-workers keeps a step fully parallel)")
     ap.add_argument("--adaptive-splinters", action="store_true",
                     help="size splinters per session from observed"
                          " per-reader throughput + steal pressure"
@@ -154,6 +166,8 @@ def main() -> None:
     if args.numa_pin and not args.topology:
         ap.error("--numa-pin requires --topology (the topology supplies "
                  "the domain->CPU map; without it nothing would be pinned)")
+    if args.service:
+        args.backend = "process"
     if args.streaming:
         args.device_ingest = True
 
@@ -189,6 +203,14 @@ def main() -> None:
     topology = (Topology.from_spec(args.topology, num_pes=num_pes,
                                    pes_per_node=num_pes)
                 if args.topology else None)
+    service = None
+    if args.service:
+        from repro.ipc.service import ReaderService, ServiceOptions
+
+        service = ReaderService(ServiceOptions(
+            pool_workers=args.pool_workers))
+        print(f"reader service: pool of {args.pool_workers} persistent "
+              f"workers (steady-state sessions re-arm, not respawn)")
     pipe = CkIOPipeline(
         data_source, args.global_batch, args.seq,
         ckio=ckio, num_consumers=args.num_consumers,
@@ -206,6 +228,7 @@ def main() -> None:
                               readahead_bytes=args.readahead_mb * (1 << 20),
                               submit_mode=args.submit_mode,
                               adaptive_queue=args.adaptive_queue),
+        service=service,
         streaming=args.streaming,
     )
 
@@ -257,6 +280,8 @@ def main() -> None:
                     on_metrics=on_metrics)
     ck.shutdown()
     pipe.close()
+    if service is not None:
+        service.shutdown()
     summary = pipe.ck  # ckio instance
     print(json.dumps({
         "final_loss": log[-1]["loss"] if log else None,
@@ -270,6 +295,8 @@ def main() -> None:
                      if topology is not None else None),
         "shards": (summary.director.shards.summary()
                    if len(args.data) > 1 else None),
+        "service": (service.metrics.summary() if service is not None
+                    else None),
     }, indent=2))
 
 
