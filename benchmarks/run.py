@@ -128,6 +128,16 @@ def perf_fileset() -> None:
     m.run(quick=common.QUICK)
 
 
+def perf_serve() -> None:
+    # Writes BENCH_serve.json at the repo root (continuous-batching serve
+    # under Poisson session churn: goodput >= 1.5x the static baseline at
+    # equal-or-better e2e p99, bit-identical to the sequential oracle,
+    # zero-copy prompt ingest, ServiceBusy backpressure on the measured
+    # path with zero admitted requests dropped, /dev/shm clean).
+    from benchmarks import perf_serve as m
+    m.run(quick=common.QUICK)
+
+
 def perf_coldpath() -> None:
     # Writes BENCH_coldpath.json at the repo root (cold-cache read engine:
     # blocking preadv vs depth-managed async submission vs O_DIRECT —
@@ -154,6 +164,7 @@ ALL = [
     perf_shm,
     perf_recovery,
     perf_service,
+    perf_serve,
     perf_fileset,
     perf_coldpath,
 ]

@@ -1,7 +1,13 @@
-"""Serving example: batched greedy decoding of CkIO-loaded prompts on a
-reduced recurrentgemma (hybrid RG-LRU + local attention).
+"""Serving example: greedy decoding of CkIO-loaded prompts on a reduced
+recurrentgemma (hybrid RG-LRU + local attention).
+
+Static batching is the default. Extra flags pass straight through to
+``repro.launch.serve``, so the continuous-batching engine is one flag away:
 
     PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --continuous --arrival-rate 50
+    PYTHONPATH=src python examples/serve_lm.py --continuous --service \
+        --pool-workers 2 --max-inflight-mb 16
 """
 import os
 import sys

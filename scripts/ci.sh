@@ -44,6 +44,14 @@
 #                                            sessions through one pool,
 #                                            bit-identical + zero-copy,
 #                                            /dev/shm clean after shutdown)
+#   benchmarks/perf_serve.py --quick         continuous-batching serve under
+#                                            Poisson session churn (goodput
+#                                            >= 1.5x the static baseline at
+#                                            equal-or-better e2e p99, bit-
+#                                            identical to the sequential
+#                                            oracle, zero-copy ingest,
+#                                            ServiceBusy backpressure on the
+#                                            measured path, /dev/shm clean)
 #   benchmarks/perf_coldpath.py --quick      cold-cache read engine (depth-
 #                                            managed async submission >= 1.5x
 #                                            blocking under the modeled PFS,
@@ -60,9 +68,9 @@
 # under the default seed; the matrix re-derives the FaultPlan from each
 # seed and must stay deterministic + green for all of them).
 # Coverage floor: line coverage of src/repro/core + src/repro/data +
-# src/repro/io + src/repro/ipc over the core/data-focused tests must stay >= the floor in
-# scripts/coverage_floor.py (stdlib settrace fallback — no third-party deps
-# required).
+# src/repro/io + src/repro/ipc + src/repro/serve over the core/data-focused
+# tests must stay >= the floor in scripts/coverage_floor.py (stdlib settrace
+# fallback — no third-party deps required).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -97,6 +105,9 @@ python benchmarks/perf_fileset.py --quick
 echo "== reader-service benchmark (smoke, pooled re-arm vs spawn) =="
 python benchmarks/perf_service.py --quick
 
+echo "== serve benchmark (smoke, continuous batching under churn) =="
+python benchmarks/perf_serve.py --quick
+
 echo "== cold-path benchmark (smoke, depth-managed submission + O_DIRECT) =="
 python benchmarks/perf_coldpath.py --quick
 
@@ -116,7 +127,7 @@ for seed in 11 20260809 424242; do
     -k "fault_plan or respawn or sibling"
 done
 
-echo "== coverage floor (core + data + io + ipc) =="
+echo "== coverage floor (core + data + io + ipc + serve) =="
 python scripts/coverage_floor.py
 
 echo "== ci OK =="

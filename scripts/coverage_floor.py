@@ -1,10 +1,10 @@
 #!/usr/bin/env python
-"""Line-coverage floor for the CkIO core + data + io + ipc packages.
+"""Line-coverage floor for the CkIO core + data + io + ipc + serve packages.
 
 Runs the core/data-focused test files and fails if line coverage of
 ``src/repro/core`` + ``src/repro/data`` + ``src/repro/io`` +
-``src/repro/ipc`` drops below the floor — so new paths in the I/O/pipeline
-subsystem can't land untested. (``ipc`` worker-process code is covered by
+``src/repro/ipc`` + ``src/repro/serve`` drops below the floor — so new
+paths in the I/O/pipeline/serving subsystem can't land untested. (``ipc`` worker-process code is covered by
 running ``worker_main`` inline in the test process; lines executed only
 inside spawned children are invisible to the collectors.)
 
@@ -30,6 +30,7 @@ TARGETS = [
     os.path.join(REPO, "src", "repro", "data"),
     os.path.join(REPO, "src", "repro", "io"),
     os.path.join(REPO, "src", "repro", "ipc"),
+    os.path.join(REPO, "src", "repro", "serve"),
 ]
 # Core/data-focused subset: exercises every module under the targets without
 # dragging in the (slow, jax-heavy) kernel/model sweeps.
@@ -48,6 +49,7 @@ TEST_FILES = [
     "tests/test_fileset.py",
     "tests/test_submit.py",
     "tests/test_service.py",
+    "tests/test_serve.py",
 ]
 DEFAULT_MIN = 85.0     # measured 89.4% at PR 2 (core+data); io added PR 3
 #                        (io/numa.py + placement topology covered by PR 4's
@@ -188,7 +190,7 @@ def main() -> int:
     if args.verbose:
         for pct, h, ex, rel in sorted(rows):
             print(f"{pct:6.1f}%  {h:4d}/{ex:<4d}  {rel}")
-    print(f"coverage[{mode}] src/repro/core+data+io+ipc: "
+    print(f"coverage[{mode}] src/repro/core+data+io+ipc+serve: "
           f"{pct_total:.1f}% ({tot_hit}/{tot_ex} lines), floor {args.min}%")
     if pct_total < args.min:
         print("coverage_floor: FAIL — below floor")

@@ -21,8 +21,10 @@ from repro.core.metrics import (
     IngestMetrics,
     LocalityMetrics,
     RecoveryMetrics,
+    ServeMetrics,
     SessionMetrics,
     StreamMetrics,
+    percentile,
 )
 from repro.core.session import FileHandle, FileOptions, Session
 from repro.core.assembler import ReadComplete
@@ -54,6 +56,8 @@ __all__ = [
     "FileHandle",
     "FileOptions",
     "IngestMetrics",
+    "ServeMetrics",
+    "percentile",
     "Session",
     "SessionMetrics",
     "ReadComplete",

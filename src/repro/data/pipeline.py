@@ -185,6 +185,35 @@ amendments:
     ``service.shutdown()`` after the last pipeline using it closes
     (``/dev/shm`` is clean only after that).
 
+Serving ingest (``repro.serve`` — the other session-lifetime regime)
+--------------------------------------------------------------------
+This pipeline is the paper's TRAINING shape: a handful of long-lived
+sessions, each spanning a whole step window. The serving subsystem
+(``src/repro/serve/``) drives the same CkIO surface from the opposite
+end: thousands of short-lived sessions per second, one per request,
+each covering only that request's prompt rows of the corpus/FileSet.
+The contracts compose rather than fork:
+
+  * **session lifetime per request**: a request's session is opened by
+    the ``RequestIngester`` at admission, carries exactly one zero-copy
+    ``read_view``, and closes the moment the decode engine has consumed
+    the prompt (``engine.admit``) — it never lives past batching, so the
+    arena-pool pressure of N inflight requests is N prompt spans, not N
+    windows. The borrowed-view lifetime rule is identical to this
+    pipeline's: no export may outlive the session, or the pooled segment
+    quarantines instead of recycling.
+  * **slot eviction is not a CkIO event**: by the time a request decodes
+    in a slot its session is already closed; EOS/max-token eviction
+    (``ContinuousBatcher``) touches engine state only.
+  * **backpressure replaces fallback**: where a training step under
+    ``use_service`` auto mode degrades a ``ServiceBusy`` to per-session
+    spawn, the serving path *queues* the request (bounded FIFO in the
+    ingester) and — only when that queue is also full — rejects the
+    submit with ``ServeOverloaded``. An admitted request is never
+    dropped; see ``serve/ingest.py`` for the state machine and
+    ``core.metrics.ServeMetrics`` (on the same Director observer path as
+    every sink above) for the histograms that prove the tail.
+
 Cold-cache reads (``direct_io`` / ``queue_depth`` — io/submit.py)
 -----------------------------------------------------------------
 First-epoch corpora are COLD: nothing below survives in the page cache,

@@ -291,6 +291,7 @@ class ReaderService:
         self._epochs = itertools.count(1)
         self._wid = itertools.count()
         self._shutdown = False
+        self._capacity_listeners: List = []
         self.director = None         # set by Director.attach_service
         for _ in range(self.opts.pool_workers):
             self._spawn_worker_locked()
@@ -367,6 +368,50 @@ class ReaderService:
     def idle_workers(self) -> int:
         with self._lock:
             return len(self._idle)
+
+    # -- admission hooks (serving-side flow control) --------------------------
+    def admission_snapshot(self) -> Dict[str, int]:
+        """Point-in-time admission state: inflight/queued sessions against
+        their caps. Advisory — the numbers can change the moment the lock
+        drops; callers use it to *pace*, never to guarantee admission."""
+        with self._lock:
+            return {
+                "inflight": len(self._running),
+                "queued": len(self._waitq),
+                "max_sessions": self.opts.max_sessions,
+                "max_queue": self.opts.max_queue,
+                "idle_workers": len(self._idle),
+            }
+
+    def would_admit(self) -> bool:
+        """Advisory pre-check: would :meth:`submit` (probably) not raise
+        :class:`ServiceBusy` right now? Racy by design — a ``True`` here can
+        still lose to a concurrent submit, so callers must keep handling
+        ``ServiceBusy``; the point is to let pacing loops (the serve
+        ingester) avoid exception-driven churn in the common case."""
+        with self._lock:
+            if self._shutdown:
+                return False
+            return (len(self._running) < self.opts.max_sessions
+                    or len(self._waitq) < self.opts.max_queue)
+
+    def add_capacity_listener(self, cb) -> None:
+        """Register ``cb()`` to fire (outside the service lock, poller or
+        caller thread) whenever admission capacity may have freed — a
+        session ended or left the wait queue. Listeners must be cheap and
+        exception-safe; they get no arguments, only the hint to re-poll
+        :meth:`admission_snapshot` / retry a queued submit."""
+        with self._lock:
+            self._capacity_listeners.append(cb)
+
+    def _notify_capacity(self) -> None:
+        with self._lock:
+            listeners = list(self._capacity_listeners)
+        for cb in listeners:
+            try:
+                cb()
+            except Exception:
+                pass                 # listener bugs never poison the service
 
     # -- admission ------------------------------------------------------------
     def submit(self, set_: "ServiceReaderSet") -> None:
@@ -701,6 +746,7 @@ class ReaderService:
                 if state.outstanding <= 0:
                     state.drained_evt.set()
             self._dispatch_locked()
+        self._notify_capacity()
 
     def _recover(self, worker: _PoolWorker, state: _SessionState,
                  msg: str, gated: bool) -> None:
@@ -830,6 +876,7 @@ class ReaderService:
             if arena is not None and not arena.closed:
                 self.arenas.release(
                     arena, quarantine=set_._pinned_borrows > 0)
+            self._notify_capacity()
 
     # -- teardown -------------------------------------------------------------
     def shutdown(self, timeout: float = 15.0) -> None:

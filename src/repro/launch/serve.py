@@ -1,7 +1,18 @@
-"""Serving driver: batched request serving with CkIO-loaded prompts.
+"""Serving driver: request serving with CkIO-loaded prompts.
+
+Static mode (default) runs the legacy pad-to-bucket ``BatchServer`` over
+one bulk prompt read. Continuous mode (``--continuous``) runs the real
+serving subsystem: per-request sessions out of a sharded ``FileSet``
+(optionally through a pooled ``ReaderService``), a ``RequestIngester``
+with bounded-queue backpressure, and the ``ContinuousBatcher`` decode loop
+over a per-slot ``ModelEngine`` — ending with a ``ServeMetrics`` summary
+table (arrival→ingested / →first-token / →e2e p50/p99/p999, occupancy,
+sessions/sec, backpressure counters).
 
   PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b \
       --smoke --requests 12 --batch 4
+  PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b \
+      --smoke --continuous --service --pool-workers 2 --arrival-rate 50
 """
 from __future__ import annotations
 
@@ -13,31 +24,34 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_config, smoke_config
-from repro.core import CkIO, FileOptions
-from repro.data import make_token_file, read_meta, decode_rows
+from repro.core import CkIO, FileOptions, ServeMetrics
+from repro.data import make_token_file, read_meta
+from repro.data.fileset import FileSet, write_token_shards
 from repro.models import build_model
-from repro.serve import BatchServer, Request
+from repro.serve import (
+    BatchServer,
+    ContinuousBatcher,
+    ModelEngine,
+    Request,
+    RequestIngester,
+    ServeOverloaded,
+    ServeRequest,
+)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="recurrentgemma-2b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=24)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--data", default="/tmp/repro_serve_prompts.bin")
-    args = ap.parse_args()
+def _print_metrics_table(metrics: ServeMetrics) -> None:
+    s = metrics.summary()
+    print("\nServeMetrics")
+    print(f"  {'metric':<26} {'value':>14}")
+    for k in sorted(s):
+        v = s[k]
+        print(f"  {k:<26} {v:>14.6g}")
+    if metrics.transitions:
+        print("  backpressure transitions:",
+              ", ".join(f"{k}×{v}" for k, v in metrics.transitions.items()))
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = smoke_config(cfg)
-    if cfg.is_encdec or cfg.input_mode == "embeddings":
-        raise SystemExit("serving example targets token-input archs")
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
 
+def _serve_static(args, model, params, cfg) -> None:
     # prompts arrive through CkIO (the request file is one large shared file)
     n_tokens = args.requests * args.prompt_len
     make_token_file(args.data, n_tokens, cfg.vocab_size, seed=7)
@@ -47,7 +61,7 @@ def main() -> None:
     off, nbytes = meta.byte_range_for_rows(0, n_tokens)
     sess = ck.start_read_session_sync(fh, nbytes, off)
     buf = np.empty(n_tokens, dtype=meta.dtype)
-    msg = ck.read_sync(sess, nbytes, off, memoryview(buf).cast("B"))
+    ck.read_sync(sess, nbytes, off, memoryview(buf).cast("B"))
     ck.close_read_session_sync(sess)
     ck.close_sync(fh)
     prompts = buf.reshape(args.requests, args.prompt_len).astype(np.int32)
@@ -59,13 +73,133 @@ def main() -> None:
     done = server.serve(reqs)
     dt = time.time() - t0
     total_new = sum(len(r.result) for r in done)
+    lats = sorted(r.latency_s for r in done)
     print(json.dumps({
+        "mode": "static",
         "requests": len(done),
         "total_s": round(dt, 3),
         "new_tokens": total_new,
         "tok_per_s": round(total_new / dt, 1),
+        "latency_p50_s": round(lats[len(lats) // 2], 4),
+        "latency_max_s": round(lats[-1], 4),
         "all_completed": all(r.result is not None for r in done),
     }, indent=2))
+
+
+def _serve_continuous(args, model, params, cfg) -> None:
+    n_tokens = args.requests * args.prompt_len
+    # prompt corpus as a sharded FileSet — the production corpus shape
+    rng = np.random.default_rng(7)
+    tokens = rng.integers(0, cfg.vocab_size, size=(n_tokens,),
+                          dtype=np.int32)
+    shard_dir = args.data + ".shards"
+    per = n_tokens // max(1, args.shards)
+    counts = [per] * (args.shards - 1) + [n_tokens - per * (args.shards - 1)]
+    fs = FileSet.build(write_token_shards(shard_dir, tokens, counts))
+
+    ck = CkIO(num_pes=2)
+    metrics = ServeMetrics()
+    ck.director.add_observer(metrics.record_session)
+    service = None
+    if args.service:
+        from repro.ipc.service import ReaderService, ServiceOptions
+
+        service = ReaderService(ServiceOptions(
+            pool_workers=args.pool_workers))
+        ck.director.attach_service(service)
+    opts = FileOptions(
+        num_readers=2,
+        backend="process" if args.service else "thread",
+        max_workers=2,
+        use_service=True if args.service else None,
+    )
+    fh = ck.open_fileset_sync(fs, opts)
+    ingester = RequestIngester(
+        ck, fh, fs, metrics,
+        max_pending=max(8, args.requests),
+        max_inflight_bytes=int(args.max_inflight_mb * (1 << 20)),
+        service=service,
+    )
+    engine = ModelEngine(model, params, slots=args.batch,
+                         seq_budget=args.prompt_len + args.max_new + 8)
+    batcher = ContinuousBatcher(engine, ingester)
+
+    reqs = [ServeRequest(rid=i, row_start=i * args.prompt_len,
+                         num_rows=args.prompt_len,
+                         max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    if args.arrival_rate > 0:
+        gaps = rng.exponential(1.0 / args.arrival_rate, size=len(reqs))
+        arrivals = np.cumsum(gaps)
+    else:
+        arrivals = np.zeros(len(reqs))
+    shed = []
+    state = {"idx": 0, "t0": time.perf_counter()}
+
+    def pump() -> bool:
+        now = time.perf_counter() - state["t0"]
+        while state["idx"] < len(reqs) and arrivals[state["idx"]] <= now:
+            try:
+                ingester.submit(reqs[state["idx"]])
+            except ServeOverloaded:
+                shed.append(reqs[state["idx"]].rid)
+            state["idx"] += 1
+        return state["idx"] < len(reqs)
+
+    t0 = time.time()
+    done = batcher.run(pump)
+    dt = time.time() - t0
+    ck.close_sync(fh)
+    if service is not None:
+        service.shutdown()
+    total_new = sum(len(r.result) for r in done)
+    print(json.dumps({
+        "mode": "continuous",
+        "requests": len(done),
+        "shed": len(shed),
+        "total_s": round(dt, 3),
+        "new_tokens": total_new,
+        "tok_per_s": round(total_new / dt, 1),
+        "all_completed": len(done) + len(shed) == args.requests,
+    }, indent=2))
+    _print_metrics_table(metrics)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-2b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static batch size / continuous decode slots")
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--data", default="/tmp/repro_serve_prompts.bin")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over per-request sessions")
+    ap.add_argument("--service", action="store_true",
+                    help="route ingest through a pooled ReaderService")
+    ap.add_argument("--pool-workers", type=int, default=2)
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrival rate in req/s (0 = all at once)")
+    ap.add_argument("--max-inflight-mb", type=float, default=64.0,
+                    help="ingest backpressure budget (open session bytes)")
+    ap.add_argument("--shards", type=int, default=3,
+                    help="prompt FileSet shard count (continuous mode)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    if cfg.is_encdec or cfg.input_mode == "embeddings":
+        raise SystemExit("serving example targets token-input archs")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    if args.continuous:
+        _serve_continuous(args, model, params, cfg)
+    else:
+        _serve_static(args, model, params, cfg)
 
 
 if __name__ == "__main__":
